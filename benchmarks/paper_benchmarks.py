@@ -1,0 +1,159 @@
+"""One benchmark per paper table/figure (MoSSo, KDD 2020).
+
+Each function returns a list of CSV rows (name, us_per_call, derived).
+Scales are sized for a single CPU core; the shapes of the curves — not the
+absolute magnitudes — are what reproduce the paper's claims (EXPERIMENTS.md
+maps each one to its figure).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from repro.core.engine import BatchedSummarizer, EngineConfig
+from repro.core.reference import ALGORITHMS, MoSSo, MoSSoSimple
+from repro.graph.streams import (barabasi_albert_edges, copying_model_edges,
+                                 edges_to_fully_dynamic_stream,
+                                 edges_to_insertion_stream)
+
+Row = Tuple[str, float, str]
+
+
+def _stream(n_nodes=800, deg=4, seed=0, fully_dynamic=True):
+    edges = barabasi_albert_edges(n_nodes, deg, seed)
+    if fully_dynamic:
+        return edges_to_fully_dynamic_stream(edges, seed=seed)
+    return edges_to_insertion_stream(edges, seed=seed)
+
+
+def fig4_speed() -> List[Row]:
+    """Fig. 4: per-change time, streaming algorithms vs batch re-run."""
+    rows: List[Row] = []
+    stream = _stream(700, 4, seed=1)
+    per_change = {}
+    for name in ("mosso", "simple", "greedy", "mcmc"):
+        sub = stream if name in ("mosso", "simple") else stream[:1200]
+        algo = ALGORITHMS[name](seed=0)
+        if hasattr(algo, "c"):
+            algo.c = 40
+        t0 = time.time()
+        algo.run(sub)
+        us = 1e6 * (time.time() - t0) / len(sub)
+        per_change[name] = us
+        rows.append((f"fig4/{name}", us,
+                     f"ratio={algo.s.compression_ratio():.3f}"))
+    # batch baseline: reflecting one change requires a full from-scratch
+    # rerun (Sect. 1/Table 1) — measure one full pass as its per-change cost
+    t0 = time.time()
+    batch = MoSSo(seed=0, c=40)
+    batch.run(edges_to_insertion_stream(
+        sorted({(min(u, v), max(u, v)) for (u, v, i) in stream if i}), seed=2))
+    batch_us = 1e6 * (time.time() - t0)
+    rows.append(("fig4/batch-rerun", batch_us,
+                 f"speedup_vs_mosso={batch_us/per_change['mosso']:.0f}x"))
+    return rows
+
+
+def fig5_compression() -> List[Row]:
+    """Fig. 5: any-time compression ratio over the stream."""
+    rows: List[Row] = []
+    edges = copying_model_edges(900, 5, 0.75, seed=2)
+    stream = edges_to_fully_dynamic_stream(edges, seed=3)
+    for name in ("mosso", "simple", "mcmc", "greedy"):
+        sub = stream if name in ("mosso", "simple") else stream[:1200]
+        algo = ALGORITHMS[name](seed=1)
+        if hasattr(algo, "c"):
+            algo.c = 40
+        t0 = time.time()
+        stats = algo.run(sub, record_every=max(1, len(sub) // 5))
+        us = 1e6 * (time.time() - t0) / len(sub)
+        hist = ";".join(f"{t}:{p/max(e,1):.3f}" for (t, p, e)
+                        in stats.phi_history)
+        rows.append((f"fig5/{name}", us,
+                     f"final={algo.s.compression_ratio():.3f} hist={hist}"))
+    return rows
+
+
+def fig1c_scalability() -> List[Row]:
+    """Fig. 1c / 7b,c: accumulated runtime vs #changes (near-linearity)."""
+    import math
+    rows: List[Row] = []
+    for name, cls in (("mosso", MoSSo), ("simple", MoSSoSimple)):
+        xs, ys = [], []
+        for n in (200, 400, 800, 1600):
+            stream = _stream(n, 4, seed=4, fully_dynamic=False)
+            algo = cls(seed=0, c=30)
+            t0 = time.time()
+            algo.run(stream)
+            el = time.time() - t0
+            xs.append(math.log(len(stream)))
+            ys.append(math.log(max(el, 1e-6)))
+        n_ = len(xs)
+        slope = ((n_ * sum(x * y for x, y in zip(xs, ys))
+                  - sum(xs) * sum(ys))
+                 / (n_ * sum(x * x for x in xs) - sum(xs) ** 2))
+        rows.append((f"fig1c/{name}", 1e6 * math.exp(ys[-1]) / 1600,
+                     f"runtime_exponent={slope:.2f} (1.0 = linear)"))
+    return rows
+
+
+def fig6_parameters() -> List[Row]:
+    """Fig. 6: effect of escape prob e and sample count c."""
+    rows: List[Row] = []
+    edges = copying_model_edges(500, 5, 0.8, seed=5)
+    stream = edges_to_insertion_stream(edges, seed=5)
+    for e in (0.0, 0.1, 0.3, 0.5):
+        algo = MoSSo(seed=2, c=40, escape=e)
+        t0 = time.time()
+        algo.run(stream)
+        rows.append((f"fig6a/e={e}", 1e6 * (time.time() - t0) / len(stream),
+                     f"ratio={algo.s.compression_ratio():.3f}"))
+    for c in (10, 40, 120):
+        algo = MoSSo(seed=2, c=c, escape=0.1)
+        t0 = time.time()
+        algo.run(stream)
+        rows.append((f"fig6b/c={c}", 1e6 * (time.time() - t0) / len(stream),
+                     f"ratio={algo.s.compression_ratio():.3f}"))
+    return rows
+
+
+def fig7a_graph_properties() -> List[Row]:
+    """Fig. 7a: higher copying probability beta -> better compression."""
+    rows: List[Row] = []
+    for beta in (0.1, 0.3, 0.5, 0.7, 0.9):
+        edges = copying_model_edges(600, 5, beta, seed=6)
+        stream = edges_to_insertion_stream(edges, seed=6)
+        algo = MoSSo(seed=3, c=40, escape=0.1)
+        t0 = time.time()
+        algo.run(stream)
+        rows.append((f"fig7a/beta={beta}",
+                     1e6 * (time.time() - t0) / len(stream),
+                     f"ratio={algo.s.compression_ratio():.3f}"))
+    return rows
+
+
+def engine_throughput() -> List[Row]:
+    """Beyond-paper: Tier-B batched engine vs Tier-A reference throughput."""
+    rows: List[Row] = []
+    stream = _stream(900, 4, seed=7)
+    cfg = EngineConfig(n_cap=2048, m_cap=1 << 14, d_cap=64, sn_cap=48,
+                       c=24, batch=64, escape=0.2)
+    bs = BatchedSummarizer(cfg)
+    bs.process(stream[:cfg.batch])           # compile outside the clock
+    t0 = time.time()
+    bs.process(stream[cfg.batch:])
+    us_b = 1e6 * (time.time() - t0) / (len(stream) - cfg.batch)
+    rows.append(("engine/batched", us_b,
+                 f"ratio={bs.compression_ratio():.3f} {bs.stats()}"))
+    ref = MoSSo(seed=0, c=24, escape=0.2)
+    t0 = time.time()
+    ref.run(stream)
+    us_r = 1e6 * (time.time() - t0) / len(stream)
+    rows.append(("engine/reference", us_r,
+                 f"ratio={ref.s.compression_ratio():.3f} "
+                 f"speedup={us_r/max(us_b,1e-9):.1f}x"))
+    return rows
+
+
+ALL = [fig4_speed, fig5_compression, fig1c_scalability, fig6_parameters,
+       fig7a_graph_properties, engine_throughput]

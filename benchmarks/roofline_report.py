@@ -1,0 +1,120 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from dry-run JSONs.
+
+Per (arch x shape x mesh): the three roofline terms, the dominant one,
+MODEL_FLOPS = 6·N(_active)·D vs compiled HLO FLOPs, and a one-line lever.
+
+Usage:  PYTHONPATH=src python -m benchmarks.roofline_report [--pod2]
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+# active param counts (per token) and dense param counts, computed from the
+# exact configs (scripts/param_counts.py); used for MODEL_FLOPS = 6·N·D.
+PARAMS_ACTIVE = {}
+
+
+def _param_counts():
+    import jax
+    from repro.configs import REGISTRY
+    from repro.models import transformer as tfm
+    from repro.models.common import param_count
+    out = {}
+    for arch, spec in REGISTRY.items():
+        if spec.family != "lm":
+            continue
+        cfg = spec.make_config()
+        p = jax.eval_shape(lambda k: tfm.init_transformer(cfg, k),
+                           jax.random.key(0))
+        total = param_count(p)
+        if cfg.moe:
+            lp = p["layers"]
+            expert = sum(int(x.size) for name, x in lp.items()
+                         if name.startswith("w_"))
+            active = total - expert + int(expert * cfg.top_k / cfg.n_experts)
+        else:
+            active = total
+        out[arch] = (total, active)
+    return out
+
+
+LEVERS = {
+    "compute": "raise MXU utilization (larger tiles / fewer small ops)",
+    "memory": "cut bytes: less remat recompute, fuse elementwise, bf16 "
+              "activations",
+    "collective": "reshard to localize gathers (see §Perf), overlap "
+                  "collectives with compute",
+}
+
+
+def load(pod2: bool):
+    suffix = "pod2" if pod2 else "pod1"
+    rows = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, f"*__{suffix}.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def tokens_for(arch: str, shape: str) -> int:
+    from repro.configs.base import LM_SHAPES
+    s = LM_SHAPES.get(shape)
+    if s is None:
+        return 0
+    if shape.startswith(("decode", "long")):
+        return s["batch"]          # one token per sequence per step
+    return s["batch"] * s["seq"]
+
+
+def main() -> None:
+    pod2 = "--pod2" in sys.argv
+    counts = _param_counts()
+    from repro.configs import REGISTRY
+    from repro.launch.steps import TRAIN_OVERRIDES
+    rows = load(pod2)
+    hdr = ("| arch | shape | dominant | t_comp (s) | t_mem (s) | t_coll (s) "
+           "| xSCAN | step t_comp | HLO TFLOP/dev | model/HLO | lever |")
+    print("Raw terms are per-scan-body (LM cells scan over layers/micro); "
+          "xSCAN is the static trip product, 'step t_comp' = t_comp*xSCAN.")
+    print()
+    print(hdr)
+    print("|" + "---|" * 11)
+    for r in rows:
+        if r.get("status") != "ok":
+            print(f"| {r['arch']} | {r['shape']} | *{r.get('status')}* "
+                  f"| - | - | - | - | - | - | - | {r.get('note', '')[:55]} |")
+            continue
+        t = r["roofline"]
+        spec = REGISTRY.get(r["arch"])
+        trips = 1
+        if spec is not None and spec.family == "lm":
+            cfg = spec.make_config()
+            trips = cfg.n_layers
+            if r["kind"] == "train":
+                trips *= TRAIN_OVERRIDES.get(r["arch"], {}).get(
+                    "n_microbatches", 1)
+        ratio = ""
+        if r["arch"] in counts and r["kind"] in ("train", "prefill", "decode"):
+            total, active = counts[r["arch"]]
+            tok = tokens_for(r["arch"], r["shape"])
+            if tok:
+                mf = (6 if r["kind"] == "train" else 2) * active * tok
+                hlo_global = t["flops"] * trips * t["n_chips"]
+                if hlo_global > 0:
+                    ratio = f"{mf / hlo_global:.2f}"
+        print(f"| {r['arch']} | {r['shape']} | **{t['dominant']}** "
+              f"| {t['t_compute']:.2e} | {t['t_memory']:.2e} "
+              f"| {t['t_collective']:.2e} | {trips} "
+              f"| {t['t_compute']*trips:.2e} | {t['flops']/1e12:.2f} "
+              f"| {ratio} | {LEVERS[t['dominant']][:40]} |")
+
+
+if __name__ == "__main__":
+    main()

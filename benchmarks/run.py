@@ -1,0 +1,19 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+
+def main() -> None:
+    from benchmarks.paper_benchmarks import ALL
+    print("name,us_per_call,derived")
+    for fn in ALL:
+        for (name, us, derived) in fn():
+            print(f"{name},{us:.1f},{derived}")
+            sys.stdout.flush()
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,75 @@
+"""GNN message passing directly on the lossless summary (beyond-paper).
+
+Summarize a community graph with MoSSo, then run GraphSAGE-style mean
+aggregation where the SpMM is computed from (G*, C) via summary_spmm —
+|P|+|C+|+|C-| work terms instead of |E| — and verify the result matches
+dense message passing exactly (losslessness means exact, not approximate).
+
+Run:  PYTHONPATH=src python examples/gnn_over_summary.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.reference import MoSSo
+from repro.graph.streams import edges_to_insertion_stream, sbm_edges
+from repro.kernels import ops, ref
+
+edges = sbm_edges(200, 8, 0.5, 0.01, seed=3)
+algo = MoSSo(seed=1, c=40, escape=0.15)
+algo.run(edges_to_insertion_stream(edges, seed=1))
+out = algo.s.materialize()
+ratio = algo.s.compression_ratio()
+print(f"summarized: phi={algo.s.phi} vs |E|={len(edges)} (ratio {ratio:.2f})")
+
+# pack the summary into device arrays
+n = max(max(e) for e in edges) + 1
+sup_ids = {sid: i for i, sid in enumerate(sorted(out.supernodes))}
+n2s = np.zeros(n, np.int32)
+for sid, mem in out.supernodes.items():
+    for u in mem:
+        n2s[u] = sup_ids[sid]
+self_loop = np.zeros(len(sup_ids), bool)
+p_src, p_dst = [], []
+for (a, b) in out.superedges:
+    if a == b:
+        self_loop[sup_ids[a]] = True
+    else:
+        p_src += [sup_ids[a], sup_ids[b]]
+        p_dst += [sup_ids[b], sup_ids[a]]
+
+
+def dirpairs(pairs):
+    s, d = [], []
+    for (u, v) in pairs:
+        s += [u, v]
+        d += [v, u]
+    return jnp.array(s, jnp.int32), jnp.array(d, jnp.int32)
+
+
+cps, cpd = dirpairs(out.c_plus)
+cms, cmd = dirpairs(out.c_minus)
+es, ed = dirpairs(list(edges))
+
+# one round of sum-aggregation, both ways
+x = jnp.array(np.random.default_rng(0).normal(size=(n, 64)), jnp.float32)
+y_summary = ops.summary_spmm(x, jnp.array(n2s), len(sup_ids),
+                             jnp.array(p_src, jnp.int32),
+                             jnp.array(p_dst, jnp.int32),
+                             cps, cpd, cms, cmd, jnp.array(self_loop))
+y_dense = ref.dense_spmm_ref(es, ed, x)
+np.testing.assert_allclose(np.asarray(y_summary), np.asarray(y_dense),
+                           rtol=1e-4, atol=1e-4)
+
+dense_terms = 2 * len(edges)
+summary_terms = (2 * len(p_src) // 2 + 2 * len(out.c_plus)
+                 + 2 * len(out.c_minus) + n)
+print(f"summary aggregation == dense aggregation ✓")
+print(f"gather/scatter terms: dense={dense_terms}  "
+      f"summary~{summary_terms}  ({summary_terms/dense_terms:.2f}x)")
+print("when phi/|E| < 1, message passing over the summary moves fewer "
+      "bytes — the paper's Queryable property as a compute kernel.")

@@ -1,0 +1,13 @@
+"""Import all arch configs to populate the registry (side-effectful)."""
+from repro.configs.base import REGISTRY, ArchSpec, ShapeCell  # noqa: F401
+from repro.configs import (dimenet, egnn, granite_moe_3b_a800m,  # noqa: F401
+                           graphcast, graphsage_reddit, internlm2_20b,
+                           llama3_405b, minicpm3_4b, mosso_stream,
+                           moonshot_v1_16b_a3b, sasrec)
+
+ASSIGNED = [
+    "moonshot-v1-16b-a3b", "granite-moe-3b-a800m", "minicpm3-4b",
+    "llama3-405b", "internlm2-20b",
+    "graphcast", "dimenet", "egnn", "graphsage-reddit",
+    "sasrec",
+]

@@ -1,0 +1,162 @@
+"""Arch registry: every assigned architecture as a selectable config.
+
+An :class:`ArchSpec` binds (full config, smoke config, per-shape input
+specs, step builders).  ``input_specs`` returns ShapeDtypeStructs only — the
+dry-run never allocates the full-size tensors.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32, I32, BF16, BOOL = jnp.float32, jnp.int32, jnp.bfloat16, jnp.bool_
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One (architecture x input-shape) dry-run cell."""
+    name: str
+    kind: str                      # train | prefill | decode | serve
+    inputs: Callable[[Any], Dict[str, jax.ShapeDtypeStruct]]
+    note: str = ""
+    skip: bool = False             # e.g. long_500k on pure full-attention LMs
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str                    # lm | gnn | recsys | mosso
+    source: str                    # public-literature citation
+    make_config: Callable[[], Any]
+    make_smoke_config: Callable[[], Any]
+    cells: Tuple[ShapeCell, ...]
+    technique_applicable: str = ""  # DESIGN.md §Arch-applicability note
+
+    def cell(self, name: str) -> ShapeCell:
+        for c in self.cells:
+            if c.name == name:
+                return c
+        raise KeyError(f"{self.arch_id} has no shape {name}")
+
+
+REGISTRY: Dict[str, ArchSpec] = {}
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    REGISTRY[spec.arch_id] = spec
+    return spec
+
+
+# ---------------------------------------------------------------- LM shapes
+
+LM_SHAPES = dict(
+    train_4k=dict(seq=4096, batch=256, kind="train"),
+    prefill_32k=dict(seq=32768, batch=32, kind="prefill"),
+    decode_32k=dict(seq=32768, batch=128, kind="decode"),
+    long_500k=dict(seq=524288, batch=1, kind="decode"),
+)
+
+
+def lm_cells(full_attention: bool = True) -> Tuple[ShapeCell, ...]:
+    cells = []
+    for name, s in LM_SHAPES.items():
+        kind = s["kind"]
+        seq, batch = s["seq"], s["batch"]
+        if kind == "train":
+            def inputs(cfg, seq=seq, batch=batch):
+                return dict(tokens=sds((batch, seq), I32),
+                            labels=sds((batch, seq), I32))
+        elif kind == "prefill":
+            def inputs(cfg, seq=seq, batch=batch):
+                return dict(tokens=sds((batch, seq), I32))
+        else:  # decode: one new token against a seq-long KV cache
+            def inputs(cfg, seq=seq, batch=batch):
+                return dict(tokens=sds((batch,), I32),
+                            cache_len=seq, cache_batch=batch)
+        skip = (name == "long_500k" and full_attention)
+        note = ("skipped: pure full-attention arch (DESIGN.md) — decode is "
+                "O(L)/token but no sub-quadratic variant exists in the "
+                "public config" if skip else "")
+        cells.append(ShapeCell(name=name, kind=kind, inputs=inputs,
+                               skip=skip, note=note))
+    return tuple(cells)
+
+
+# --------------------------------------------------------------- GNN shapes
+
+def _pad512(x: int) -> int:
+    """Node/edge counts padded to the 512-chip multi-pod mesh (masked)."""
+    return (x + 511) // 512 * 512
+
+
+GNN_SHAPES = dict(
+    full_graph_sm=dict(n=_pad512(2708), e=_pad512(10556), f=1433,
+                       kind="train", note="2708 live nodes, rest masked"),
+    minibatch_lg=dict(n=262144, e=262144, f=602, kind="train",
+                      note="1024 seeds x fanout 15-10 padded subgraph; "
+                           "sampler in repro.graph.sampling"),
+    ogb_products=dict(n=_pad512(2449029), e=_pad512(61859140), f=100,
+                      kind="train", note="2449029 live nodes, rest masked"),
+    molecule=dict(n=_pad512(30 * 128), e=64 * 128 * 2, f=32, kind="train",
+                  note="128 molecules of 30 nodes, flattened disjoint union"),
+)
+
+
+def gnn_cells(needs_coords: bool, triplet_cap: int = 4) -> Tuple[ShapeCell, ...]:
+    cells = []
+    for name, s in GNN_SHAPES.items():
+        def inputs(cfg, s=s):
+            n, e, f = s["n"], s["e"], s["f"]
+            d = dict(
+                node_feat=sds((n, f), F32),
+                senders=sds((e,), I32),
+                receivers=sds((e,), I32),
+                edge_mask=sds((e,), BOOL),
+                node_mask=sds((n,), BOOL),
+                labels=sds((n,), I32),
+            )
+            if needs_coords:
+                d["coords"] = sds((n, 3), F32)
+                if getattr(cfg, "arch", "") == "dimenet":
+                    t = e * triplet_cap
+                    d["triplet_kj"] = sds((t,), I32)
+                    d["triplet_ji"] = sds((t,), I32)
+            return d
+        cells.append(ShapeCell(name=name, kind="train", inputs=inputs,
+                               note=s.get("note", "")))
+    return tuple(cells)
+
+
+# ------------------------------------------------------------ recsys shapes
+
+RECSYS_SHAPES = dict(
+    train_batch=dict(batch=65536, kind="train"),
+    serve_p99=dict(batch=512, kind="serve", n_cand=4096),
+    serve_bulk=dict(batch=262144, kind="serve", n_cand=4096),
+    retrieval_cand=dict(batch=1, kind="serve", n_cand=1_000_000),
+)
+
+
+def recsys_cells() -> Tuple[ShapeCell, ...]:
+    cells = []
+    for name, s in RECSYS_SHAPES.items():
+        if s["kind"] == "train":
+            def inputs(cfg, s=s):
+                L = cfg.seq_len
+                return dict(seq=sds((s["batch"], L), I32),
+                            pos=sds((s["batch"], L), I32),
+                            neg=sds((s["batch"], L), I32))
+        else:
+            def inputs(cfg, s=s):
+                L = cfg.seq_len
+                return dict(seq=sds((s["batch"], L), I32),
+                            candidates=sds((s["n_cand"],), I32))
+        cells.append(ShapeCell(name=name, kind=s["kind"], inputs=inputs))
+    return tuple(cells)

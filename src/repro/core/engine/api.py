@@ -1,0 +1,172 @@
+"""Host-side wrapper around the batched engine (Tier B public API)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core.engine.state import EngineConfig, EngineState, new_state
+from repro.core.engine.trial import make_step
+from repro.core.summary import SummaryOutput, encoding_cost, is_superedge, pair_key
+
+Change = Tuple[int, int, bool]
+
+
+class BatchedSummarizer:
+    """Feed a fully dynamic graph stream through the jitted engine step.
+
+    Node ids are remapped into the engine's dense [0, n_cap) id space so
+    callers may use arbitrary hashable node labels.
+    """
+
+    def __init__(self, cfg: EngineConfig | None = None, **overrides) -> None:
+        if cfg is None:
+            cfg = EngineConfig(**overrides)
+        elif overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        self.cfg = cfg
+        self.state: EngineState = new_state(cfg)
+        self._step = make_step(cfg)
+        self._ids: Dict[object, int] = {}
+        self._rev: List[object] = []
+
+    # ------------------------------------------------------------------ ids
+    def _nid(self, label: object) -> int:
+        i = self._ids.get(label)
+        if i is None:
+            i = len(self._rev)
+            assert i < self.cfg.n_cap, "node capacity exceeded"
+            self._ids[label] = i
+            self._rev.append(label)
+        return i
+
+    # --------------------------------------------------------------- stream
+    def process(self, changes: Sequence[Change]) -> None:
+        b = self.cfg.batch
+        buf = [(self._nid(u), self._nid(v), ins) for (u, v, ins) in changes]
+        for off in range(0, len(buf), b):
+            chunk = buf[off:off + b]
+            pad = b - len(chunk)
+            u = np.array([c[0] for c in chunk] + [-1] * pad, np.int32)
+            v = np.array([c[1] for c in chunk] + [-1] * pad, np.int32)
+            ins = np.array([c[2] for c in chunk] + [False] * pad, bool)
+            self.state = self._step(self.state, u, v, ins)
+
+    def run(self, stream: Iterable[Change]) -> "BatchedSummarizer":
+        self.process(list(stream))
+        return self
+
+    # ------------------------------------------------------------ maintenance
+    def table_pressure(self) -> Dict[str, float]:
+        """live+tombstone slot fraction per table (probe-chain health)."""
+        from repro.core.engine.hashtable import TOMB
+        out = {}
+        for name in ("adj", "epos", "eab", "snadj", "snpos"):
+            t = getattr(self.state, name)
+            k1 = np.asarray(t.k1)
+            out[name] = float(((k1 >= 0) | (k1 == int(TOMB))).mean())
+        return out
+
+    def maybe_compact(self, threshold: float = 0.7) -> bool:
+        """Rebuild tables whose occupied fraction (live + tombstones) crosses
+        ``threshold``.  Long fully-dynamic streams accumulate tombstones that
+        stretch linear-probe chains; production deployments call this between
+        steps (it is pure state -> state, so it composes with checkpoints).
+        """
+        from repro.core.engine.hashtable import ht_rebuild
+        pressure = self.table_pressure()
+        dirty = {n: p for n, p in pressure.items() if p > threshold}
+        if not dirty:
+            return False
+        self.state = self.state._replace(
+            **{n: ht_rebuild(getattr(self.state, n)) for n in dirty})
+        return True
+
+    # ---------------------------------------------------------------- stats
+    @property
+    def phi(self) -> int:
+        return int(self.state.phi)
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.state.num_edges)
+
+    def compression_ratio(self) -> float:
+        e = self.num_edges
+        return float(self.phi) / e if e else 0.0
+
+    def stats(self) -> dict:
+        s = self.state
+        return dict(phi=int(s.phi), num_edges=int(s.num_edges),
+                    trials=int(s.n_trials), accepted=int(s.n_accept),
+                    skipped=int(s.n_skipped))
+
+    # ------------------------------------------------------------ materialize
+    def live_edges(self) -> Set[Tuple[int, int]]:
+        """Export the live edge set from the slot-position table."""
+        k1 = np.asarray(self.state.epos.k1)
+        k2 = np.asarray(self.state.epos.k2)
+        live = k1 >= 0
+        return {(int(a), int(b)) for a, b in zip(k1[live], k2[live]) if a < b}
+
+    def materialize(self) -> SummaryOutput:
+        """Derive (G*, P, C+, C-) from counts + membership (optimal encoding)."""
+        n2s = np.asarray(self.state.n2s)
+        ssize = np.asarray(self.state.ssize)
+        seen = n2s >= 0
+        members: Dict[int, Set[int]] = {}
+        for u in np.nonzero(seen)[0]:
+            members.setdefault(int(n2s[u]), set()).add(int(u))
+        for sid, mem in members.items():
+            assert len(mem) == ssize[sid], f"ssize drift at sid {sid}"
+
+        k1 = np.asarray(self.state.eab.k1)
+        k2 = np.asarray(self.state.eab.k2)
+        val = np.asarray(self.state.eab.val)
+        live = k1 >= 0
+        edges = self.live_edges()
+
+        superedges: Set[Tuple[int, int]] = set()
+        c_plus: Set[Tuple[int, int]] = set()
+        c_minus: Set[Tuple[int, int]] = set()
+        for a, b, e in zip(k1[live], k2[live], val[live]):
+            a, b, e = int(a), int(b), int(e)
+            sa, sb = len(members[a]), len(members[b])
+            t = sa * (sa - 1) // 2 if a == b else sa * sb
+            pair_edges = [pq for pq in _pairs(members[a], members[b], a == b)]
+            actual = [pq for pq in pair_edges if pq in edges]
+            assert len(actual) == e, f"eab drift at pair {(a, b)}: {len(actual)} != {e}"
+            if is_superedge(e, t):
+                superedges.add(pair_key(a, b))
+                c_minus.update(pq for pq in pair_edges if pq not in edges)
+            else:
+                c_plus.update(actual)
+        return SummaryOutput(supernodes=members, superedges=superedges,
+                             c_plus=c_plus, c_minus=c_minus)
+
+    def phi_recomputed(self) -> int:
+        k1 = np.asarray(self.state.eab.k1)
+        k2 = np.asarray(self.state.eab.k2)
+        val = np.asarray(self.state.eab.val)
+        ssize = np.asarray(self.state.ssize)
+        live = k1 >= 0
+        tot = 0
+        for a, b, e in zip(k1[live], k2[live], val[live]):
+            a, b = int(a), int(b)
+            sa, sb = int(ssize[a]), int(ssize[b])
+            t = sa * (sa - 1) // 2 if a == b else sa * sb
+            tot += encoding_cost(int(e), t)
+        return tot
+
+
+def _pairs(ma: Set[int], mb: Set[int], same: bool):
+    if same:
+        mem = sorted(ma)
+        for i, u in enumerate(mem):
+            for v in mem[i + 1:]:
+                yield (u, v)
+    else:
+        for u in sorted(ma):
+            for v in sorted(mb):
+                yield (u, v) if u < v else (v, u)

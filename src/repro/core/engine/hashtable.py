@@ -1,0 +1,188 @@
+"""Open-addressing hash tables in fixed-shape JAX arrays (Tier B substrate).
+
+The paper assumes "the neighborhood in C+, C- and P of each node is stored in
+a hash table" (Thm. 3).  On TPU we realize that assumption with preallocated
+HBM-resident open-addressing tables: `int32` key pairs, linear probing,
+tombstone deletion.  All operations are pure functions `table -> table` and
+compile into bounded `lax.while_loop` probes (expected O(1) probes at the
+load factors we configure).
+
+Keys are pairs ``(k1, k2)`` of non-negative int32 so that node-pair and
+(node, slot) keys never need 64-bit arithmetic.  ``k1 == EMPTY`` marks a free
+slot and ``k1 == TOMB`` a deleted one.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+EMPTY = jnp.int32(-1)
+TOMB = jnp.int32(-2)
+
+
+class HashTable(NamedTuple):
+    k1: jax.Array  # int32[cap]
+    k2: jax.Array  # int32[cap]
+    val: jax.Array  # int32[cap]
+
+    @property
+    def capacity(self) -> int:
+        return self.k1.shape[0]
+
+
+def ht_new(capacity: int) -> HashTable:
+    assert capacity & (capacity - 1) == 0, "capacity must be a power of two"
+    return HashTable(
+        k1=jnp.full((capacity,), EMPTY, jnp.int32),
+        k2=jnp.full((capacity,), EMPTY, jnp.int32),
+        val=jnp.zeros((capacity,), jnp.int32),
+    )
+
+
+def _hash(k1: jax.Array, k2: jax.Array, cap: int) -> jax.Array:
+    """Two-word integer mix (fmix32-style) onto [0, cap)."""
+    h = k1.astype(jnp.uint32) * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h + k2.astype(jnp.uint32) * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x27D4EB2F)
+    h = h ^ (h >> 15)
+    return (h & jnp.uint32(cap - 1)).astype(jnp.int32)
+
+
+def ht_find(ht: HashTable, k1, k2) -> Tuple[jax.Array, jax.Array]:
+    """Return (slot, found). Probes until the key or an EMPTY slot is hit."""
+    cap = ht.capacity
+    k1 = jnp.asarray(k1, jnp.int32)
+    k2 = jnp.asarray(k2, jnp.int32)
+    start = _hash(k1, k2, cap)
+
+    def cond(carry):
+        i, _ = carry
+        slot = (start + i) & (cap - 1)
+        hit = (ht.k1[slot] == k1) & (ht.k2[slot] == k2)
+        return (~hit) & (ht.k1[slot] != EMPTY) & (i < cap)
+
+    def body(carry):
+        i, _ = carry
+        return (i + 1, jnp.int32(0))
+
+    i, _ = jax.lax.while_loop(cond, body, (jnp.int32(0), jnp.int32(0)))
+    slot = (start + i) & (cap - 1)
+    found = (ht.k1[slot] == k1) & (ht.k2[slot] == k2)
+    return slot, found
+
+
+def ht_lookup(ht: HashTable, k1, k2, default=0) -> jax.Array:
+    slot, found = ht_find(ht, k1, k2)
+    return jnp.where(found, ht.val[slot], jnp.int32(default))
+
+
+def ht_lookup_batch(ht: HashTable, k1: jax.Array, k2: jax.Array,
+                    default=0) -> jax.Array:
+    """Vectorized read-only lookups (vmap over the probe loop)."""
+    return jax.vmap(lambda a, b: ht_lookup(ht, a, b, default))(k1, k2)
+
+
+def _find_insert_slot(ht: HashTable, k1, k2) -> Tuple[jax.Array, jax.Array]:
+    """Slot for an upsert: the key's slot if present, else first free slot."""
+    cap = ht.capacity
+    start = _hash(k1, k2, cap)
+
+    # pass 1: find the key or the end of its probe chain (EMPTY).
+    def cond1(i):
+        slot = (start + i) & (cap - 1)
+        hit = (ht.k1[slot] == k1) & (ht.k2[slot] == k2)
+        return (~hit) & (ht.k1[slot] != EMPTY) & (i < cap)
+
+    i1 = jax.lax.while_loop(cond1, lambda i: i + 1, jnp.int32(0))
+    slot1 = (start + i1) & (cap - 1)
+    found = (ht.k1[slot1] == k1) & (ht.k2[slot1] == k2)
+
+    # pass 2 (only matters when not found): first EMPTY or TOMB slot.
+    def cond2(i):
+        slot = (start + i) & (cap - 1)
+        free = (ht.k1[slot] == EMPTY) | (ht.k1[slot] == TOMB)
+        return (~free) & (i < cap)
+
+    i2 = jax.lax.while_loop(cond2, lambda i: i + 1, jnp.int32(0))
+    slot2 = (start + i2) & (cap - 1)
+    return jnp.where(found, slot1, slot2), found
+
+
+def ht_set(ht: HashTable, k1, k2, v) -> HashTable:
+    """Upsert key -> v."""
+    k1 = jnp.asarray(k1, jnp.int32)
+    k2 = jnp.asarray(k2, jnp.int32)
+    slot, _ = _find_insert_slot(ht, k1, k2)
+    return HashTable(
+        k1=ht.k1.at[slot].set(k1),
+        k2=ht.k2.at[slot].set(k2),
+        val=ht.val.at[slot].set(jnp.asarray(v, jnp.int32)),
+    )
+
+
+def ht_add(ht: HashTable, k1, k2, delta, remove_if_zero: bool = False,
+           ) -> Tuple[HashTable, jax.Array]:
+    """val[key] += delta (inserting at 0 if absent); returns (table, new val).
+
+    With ``remove_if_zero`` the entry is tombstoned when it reaches 0 —
+    used by the E_AB count table so that `SN` adjacency mirrors E>0 pairs.
+    """
+    k1 = jnp.asarray(k1, jnp.int32)
+    k2 = jnp.asarray(k2, jnp.int32)
+    slot, found = _find_insert_slot(ht, k1, k2)
+    old = jnp.where(found, ht.val[slot], jnp.int32(0))
+    new = old + jnp.asarray(delta, jnp.int32)
+    dead = remove_if_zero & (new == 0)
+    return HashTable(
+        k1=ht.k1.at[slot].set(jnp.where(dead, TOMB, k1)),
+        k2=ht.k2.at[slot].set(jnp.where(dead, TOMB, k2)),
+        val=ht.val.at[slot].set(jnp.where(dead, 0, new)),
+    ), new
+
+
+def ht_delete(ht: HashTable, k1, k2) -> HashTable:
+    """Tombstone the key if present (no-op otherwise)."""
+    k1 = jnp.asarray(k1, jnp.int32)
+    k2 = jnp.asarray(k2, jnp.int32)
+    slot, found = ht_find(ht, k1, k2)
+    return HashTable(
+        k1=ht.k1.at[slot].set(jnp.where(found, TOMB, ht.k1[slot])),
+        k2=ht.k2.at[slot].set(jnp.where(found, TOMB, ht.k2[slot])),
+        val=ht.val.at[slot].set(jnp.where(found, 0, ht.val[slot])),
+    )
+
+
+def ht_contains(ht: HashTable, k1, k2) -> jax.Array:
+    _, found = ht_find(ht, k1, k2)
+    return found
+
+
+def ht_live_mask(ht: HashTable) -> jax.Array:
+    return ht.k1 >= 0
+
+
+def ht_load(ht: HashTable) -> jax.Array:
+    """Fraction of live slots (host-side maintenance signal)."""
+    return jnp.mean(ht_live_mask(ht).astype(jnp.float32))
+
+
+def ht_rebuild(ht: HashTable) -> HashTable:
+    """Host-callable compaction: rehash live entries into a fresh table.
+
+    Long fully-dynamic streams accumulate tombstones that stretch probe
+    chains; production deployments call this between steps when
+    ``ht_load + tombstone fraction`` crosses a threshold.
+    """
+    fresh = ht_new(ht.capacity)
+
+    def body(i, t):
+        live = ht.k1[i] >= 0
+        return jax.lax.cond(
+            live, lambda t: ht_set(t, ht.k1[i], ht.k2[i], ht.val[i]),
+            lambda t: t, t)
+
+    return jax.lax.fori_loop(0, ht.capacity, body, fresh)

@@ -1,0 +1,337 @@
+"""Primitive state transitions of the batched engine (Tier B).
+
+Everything here is jit-compatible and mirrors, in fixed shapes, what
+:mod:`repro.core.reference.dynamic_summary` does with Python dicts:
+
+* ``insert_edge`` / ``delete_edge``   — one stream change,
+* ``delta_phi_move``                  — closed-form objective change of a move,
+* ``apply_move``                      — commit an accepted move,
+* ``recompute_phi``                   — fold over the E_AB table (tests).
+
+The encoding itself (P / C+ / C-) is a *derived view* of ``(E_AB, sizes)``
+via the optimal-encoding rule — the engine never materializes it on device,
+which is exactly why moves only need count arithmetic (cf. "Updating Optimal
+Encoding", Sect. 3.6.3).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine.hashtable import (ht_add, ht_delete, ht_lookup,
+                                         ht_lookup_batch, ht_set)
+from repro.core.engine.state import NO_CLUSTER, EngineConfig, EngineState
+
+# --------------------------------------------------------------------------- #
+# small math helpers
+# --------------------------------------------------------------------------- #
+
+
+def cost(e: jax.Array, t: jax.Array) -> jax.Array:
+    """Optimal per-pair encoding cost min(E, T-E+1), 0 when E==0 (int32)."""
+    return jnp.where(e <= 0, 0, jnp.minimum(e, t - e + 1)).astype(jnp.int32)
+
+
+def tri(n: jax.Array) -> jax.Array:
+    return (n * (n - 1)) // 2
+
+
+def t_of(sa: jax.Array, sb: jax.Array, same: jax.Array) -> jax.Array:
+    return jnp.where(same, tri(sa), sa * sb)
+
+
+def mixhash(x: jax.Array) -> jax.Array:
+    """Node hash for min-hash clustering (positive int32)."""
+    h = x.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    return (h & jnp.uint32(0x7FFFFFFE)).astype(jnp.int32)
+
+
+def rnd_u32(seed: jax.Array, ctr: jax.Array) -> jax.Array:
+    """Counter-based splitmix32 PRNG (cheap, deterministic, jit-friendly)."""
+    x = seed.astype(jnp.uint32) + ctr.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x21F0AAAD)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x735A2D97)
+    return x ^ (x >> 15)
+
+
+def rnd_u01(seed: jax.Array, ctr: jax.Array) -> jax.Array:
+    return rnd_u32(seed, ctr).astype(jnp.float32) / jnp.float32(4294967296.0)
+
+
+def rnd_below(seed: jax.Array, ctr: jax.Array, n: jax.Array) -> jax.Array:
+    """Uniform int in [0, max(n,1))."""
+    return (rnd_u32(seed, ctr) % jnp.maximum(n, 1).astype(jnp.uint32)).astype(jnp.int32)
+
+
+def canon(a: jax.Array, b: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    return jnp.minimum(a, b), jnp.maximum(a, b)
+
+
+# --------------------------------------------------------------------------- #
+# supernode-pair count + SN adjacency maintenance
+# --------------------------------------------------------------------------- #
+
+
+def _sn_insert(st: EngineState, x: jax.Array, y: jax.Array) -> EngineState:
+    """Append y to SN(x)'s slot list."""
+    i = st.sndeg[x]
+    return st._replace(
+        snadj=ht_set(st.snadj, x, i, y),
+        snpos=ht_set(st.snpos, x, y, i),
+        sndeg=st.sndeg.at[x].add(1),
+    )
+
+
+def _sn_remove(st: EngineState, x: jax.Array, y: jax.Array) -> EngineState:
+    """Swap-delete y from SN(x)'s slot list."""
+    i = ht_lookup(st.snpos, x, y)
+    last = st.sndeg[x] - 1
+    w = ht_lookup(st.snadj, x, last)
+    snadj = ht_set(st.snadj, x, i, w)
+    snpos = ht_set(st.snpos, x, w, i)
+    snadj = ht_delete(snadj, x, last)
+    snpos = ht_delete(snpos, x, y)
+    return st._replace(snadj=snadj, snpos=snpos, sndeg=st.sndeg.at[x].add(-1))
+
+
+def pair_count_add(st: EngineState, a: jax.Array, b: jax.Array,
+                   delta: jax.Array) -> EngineState:
+    """E_AB += delta, maintaining the SN slot lists on 0<->nonzero edges."""
+    ca, cb = canon(a, b)
+    eab, new = ht_add(st.eab, ca, cb, delta, remove_if_zero=True)
+    old = new - delta
+    st = st._replace(eab=eab)
+    created = (old == 0) & (new != 0)
+    removed = (new == 0) & (old != 0)
+
+    def do_create(st):
+        st = _sn_insert(st, ca, cb)
+        return jax.lax.cond(ca == cb, lambda s: s,
+                            lambda s: _sn_insert(s, cb, ca), st)
+
+    def do_remove(st):
+        st = _sn_remove(st, ca, cb)
+        return jax.lax.cond(ca == cb, lambda s: s,
+                            lambda s: _sn_remove(s, cb, ca), st)
+
+    st = jax.lax.cond(created, do_create, lambda s: s, st)
+    st = jax.lax.cond(removed, do_remove, lambda s: s, st)
+    return st
+
+
+# --------------------------------------------------------------------------- #
+# nodes and edges
+# --------------------------------------------------------------------------- #
+
+
+def ensure_node(st: EngineState, u: jax.Array) -> EngineState:
+    def alloc(st):
+        top = st.free_top - 1
+        sid = st.free[top]
+        return st._replace(
+            n2s=st.n2s.at[u].set(sid),
+            ssize=st.ssize.at[sid].set(1),
+            free_top=top,
+        )
+    return jax.lax.cond(st.n2s[u] >= 0, lambda s: s, alloc, st)
+
+
+def _adj_append(st: EngineState, u: jax.Array, v: jax.Array) -> EngineState:
+    i = st.deg[u]
+    return st._replace(
+        adj=ht_set(st.adj, u, i, v),
+        epos=ht_set(st.epos, u, v, i),
+        deg=st.deg.at[u].add(1),
+    )
+
+
+def _adj_remove(st: EngineState, u: jax.Array, v: jax.Array) -> EngineState:
+    i = ht_lookup(st.epos, u, v)
+    last = st.deg[u] - 1
+    w = ht_lookup(st.adj, u, last)
+    adj = ht_set(st.adj, u, i, w)
+    epos = ht_set(st.epos, u, w, i)
+    adj = ht_delete(adj, u, last)
+    epos = ht_delete(epos, u, v)
+    return st._replace(adj=adj, epos=epos, deg=st.deg.at[u].add(-1))
+
+
+def neighbor_slots(st: EngineState, y: jax.Array, d_cap: int,
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """First min(deg, d_cap) neighbors of y (fixed-shape gather)."""
+    idx = jnp.arange(d_cap, dtype=jnp.int32)
+    valid = idx < st.deg[y]
+    nbrs = ht_lookup_batch(st.adj, jnp.full((d_cap,), y, jnp.int32), idx,
+                           default=-1)
+    return jnp.where(valid, nbrs, -1), valid
+
+
+def _minh_recompute(st: EngineState, u: jax.Array, d_cap: int) -> jax.Array:
+    """minh(u) = min hash over (up to d_cap) current neighbors.
+
+    Exact for deg <= d_cap; a uniform-ish subset otherwise (swap-deletes
+    shuffle slot order) — deviation #1 documented in DESIGN.md.
+    """
+    nbrs, valid = neighbor_slots(st, u, d_cap)
+    hs = jnp.where(valid, mixhash(nbrs), NO_CLUSTER)
+    return jnp.min(hs).astype(jnp.int32)
+
+
+def insert_edge(st: EngineState, u: jax.Array, v: jax.Array,
+                d_cap: int) -> EngineState:
+    st = ensure_node(st, u)
+    st = ensure_node(st, v)
+    a, b = st.n2s[u], st.n2s[v]
+    ca, cb = canon(a, b)
+    e = ht_lookup(st.eab, ca, cb)
+    t = t_of(st.ssize[a], st.ssize[b], a == b)
+    st = st._replace(phi=st.phi + cost(e + 1, t) - cost(e, t))
+    st = pair_count_add(st, a, b, jnp.int32(1))
+    st = _adj_append(st, u, v)
+    st = _adj_append(st, v, u)
+    minh = st.minh.at[u].min(mixhash(v)).at[v].min(mixhash(u))
+    return st._replace(minh=minh, num_edges=st.num_edges + 1)
+
+
+def delete_edge(st: EngineState, u: jax.Array, v: jax.Array,
+                d_cap: int) -> EngineState:
+    a, b = st.n2s[u], st.n2s[v]
+    ca, cb = canon(a, b)
+    e = ht_lookup(st.eab, ca, cb)
+    t = t_of(st.ssize[a], st.ssize[b], a == b)
+    st = st._replace(phi=st.phi + cost(e - 1, t) - cost(e, t))
+    st = pair_count_add(st, a, b, jnp.int32(-1))
+    st = _adj_remove(st, u, v)
+    st = _adj_remove(st, v, u)
+    st = st._replace(num_edges=st.num_edges - 1)
+
+    def fix(st, x, other):
+        return jax.lax.cond(
+            st.minh[x] == mixhash(other),
+            lambda s: s._replace(minh=s.minh.at[x].set(_minh_recompute(s, x, d_cap))),
+            lambda s: s, st)
+
+    st = fix(st, u, v)
+    st = fix(st, v, u)
+    return st
+
+
+# --------------------------------------------------------------------------- #
+# moves
+# --------------------------------------------------------------------------- #
+
+
+def _first_occurrence(x: jax.Array) -> jax.Array:
+    """Mask of first occurrences (dedupe) for a small 1-D int array."""
+    eq = x[None, :] == x[:, None]
+    earlier = jnp.tril(eq, k=-1).any(axis=1)
+    return ~earlier
+
+
+def delta_phi_move(st: EngineState, y: jax.Array, target: jax.Array,
+                   is_fresh: jax.Array, cfg: EngineConfig,
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(dphi, nbrs, nvalid): closed-form phi change of moving y -> target.
+
+    ``is_fresh`` marks an escape to a brand-new singleton (size 0 before the
+    move).  Caller guarantees deg(y) <= d_cap and sndeg bounds <= sn_cap.
+    """
+    d_cap, sn_cap = cfg.d_cap, cfg.sn_cap
+    a = st.n2s[y]
+    sa = st.ssize[a]
+    sb = jnp.where(is_fresh, 0, st.ssize[target])
+
+    nbrs, nvalid = neighbor_slots(st, y, d_cap)
+    nsid = jnp.where(nvalid, st.n2s[jnp.clip(nbrs, 0)], -1)
+
+    sl = jnp.arange(sn_cap, dtype=jnp.int32)
+    sn_a = jnp.where(sl < st.sndeg[a],
+                     ht_lookup_batch(st.snadj, jnp.full((sn_cap,), a, jnp.int32),
+                                     sl, default=-1), -1)
+    sndeg_b = jnp.where(is_fresh, 0, st.sndeg[target])
+    sn_b = jnp.where(sl < sndeg_b,
+                     ht_lookup_batch(st.snadj,
+                                     jnp.full((sn_cap,), target, jnp.int32),
+                                     sl, default=-1), -1)
+
+    xs = jnp.concatenate([nsid, sn_a, sn_b])            # [L]
+    first = _first_occurrence(xs)
+    is_ab = (xs == a) | (xs == target)
+    ok = (xs >= 0) & first & ~is_ab
+
+    # h[X] = |N(y) ∩ X|
+    h = (xs[:, None] == nsid[None, :]).sum(axis=1).astype(jnp.int32)
+    sx = st.ssize[jnp.clip(xs, 0)]
+    xa = jnp.minimum(a, xs)
+    xb = jnp.maximum(a, xs)
+    e_ax = ht_lookup_batch(st.eab, xa, xb)
+    ta, tb = jnp.minimum(target, xs), jnp.maximum(target, xs)
+    e_bx = ht_lookup_batch(st.eab, ta, tb)
+
+    d_gen = (cost(e_ax - h, (sa - 1) * sx) - cost(e_ax, sa * sx)
+             + cost(e_bx + h, (sb + 1) * sx) - cost(e_bx, sb * sx))
+    d = jnp.sum(jnp.where(ok, d_gen, 0))
+
+    # special pairs (A,A), (B,B), (A,B)
+    h_a = jnp.sum(nsid == a).astype(jnp.int32)
+    h_b = jnp.sum(nsid == target).astype(jnp.int32)
+    e_aa = ht_lookup(st.eab, a, a)
+    e_bb = jnp.where(is_fresh, 0, ht_lookup(st.eab, target, target))
+    pa, pb = canon(a, target)
+    e_ab = jnp.where(is_fresh, 0, ht_lookup(st.eab, pa, pb))
+    d += cost(e_aa - h_a, tri(sa - 1)) - cost(e_aa, tri(sa))
+    d += cost(e_bb + h_b, tri(sb + 1)) - cost(e_bb, tri(sb))
+    d += (cost(e_ab - h_b + h_a, (sa - 1) * (sb + 1)) - cost(e_ab, sa * sb))
+    return d, nbrs, nvalid
+
+
+def apply_move(st: EngineState, y: jax.Array, target: jax.Array,
+               dphi: jax.Array, nbrs: jax.Array, nvalid: jax.Array,
+               ) -> EngineState:
+    """Commit the move (target sid must already be allocated by the caller)."""
+    a = st.n2s[y]
+
+    def body(i, st):
+        def upd(st):
+            w = nbrs[i]
+            sw = st.n2s[w]
+            st = pair_count_add(st, a, sw, jnp.int32(-1))
+            return pair_count_add(st, target, sw, jnp.int32(1))
+        return jax.lax.cond(nvalid[i], upd, lambda s: s, st)
+
+    st = jax.lax.fori_loop(0, nbrs.shape[0], body, st)
+    ssize = st.ssize.at[a].add(-1).at[target].add(1)
+    st = st._replace(n2s=st.n2s.at[y].set(target), ssize=ssize,
+                     phi=st.phi + dphi)
+
+    def free_a(st):
+        return st._replace(free=st.free.at[st.free_top].set(a),
+                           free_top=st.free_top + 1)
+
+    return jax.lax.cond(ssize[a] == 0, free_a, lambda s: s, st)
+
+
+def alloc_sid(st: EngineState) -> Tuple[EngineState, jax.Array]:
+    top = st.free_top - 1
+    sid = st.free[top]
+    return st._replace(free_top=top), sid
+
+
+# --------------------------------------------------------------------------- #
+# audits (host/test use)
+# --------------------------------------------------------------------------- #
+
+
+def recompute_phi(st: EngineState) -> jax.Array:
+    """Fold the optimal-encoding cost over all live E_AB entries."""
+    live = st.eab.k1 >= 0
+    a = jnp.clip(st.eab.k1, 0)
+    b = jnp.clip(st.eab.k2, 0)
+    t = t_of(st.ssize[a], st.ssize[b], a == b)
+    return jnp.sum(jnp.where(live, cost(st.eab.val, t), 0))

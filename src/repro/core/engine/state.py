@@ -1,0 +1,98 @@
+"""Fixed-shape engine state for the batched TPU-native MoSSo (Tier B).
+
+Everything lives in preallocated arrays/hash tables so a summarization step
+is a pure jitted function ``(state, change_batch, seed) -> state``.
+
+Capacity model (host-validated): ``n_cap`` nodes, ``m_cap`` live undirected
+edges, movable-node degree bound ``d_cap``, supernode-adjacency bound
+``sn_cap``.  Hash tables are sized at ~4x their worst-case live entries so
+linear probing stays O(1) (see `hashtable.py`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine.hashtable import HashTable, ht_new
+
+NO_CLUSTER = jnp.int32(0x7FFFFFFF)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    n_cap: int = 1 << 14          # max distinct nodes
+    m_cap: int = 1 << 17          # max live undirected edges
+    d_cap: int = 64               # movable-node degree bound (deviation #1)
+    sn_cap: int = 32              # supernode-adjacency bound for moves
+    c: int = 20                   # samples per input node (paper's c)
+    escape: float = 0.3           # corrective-escape probability (paper's e)
+    batch: int = 32               # changes per jitted step
+    seed: int = 0
+
+    def table_caps(self) -> dict:
+        def pow2(x: int) -> int:
+            c = 1
+            while c < x:
+                c <<= 1
+            return c
+        return dict(
+            adj=pow2(4 * self.m_cap),      # (u, slot) -> v, two directions
+            epos=pow2(4 * self.m_cap),     # (u, v) -> slot, two directions
+            eab=pow2(2 * self.m_cap),      # canonical pair -> |E_AB|
+            snadj=pow2(2 * self.m_cap),    # (sid, slot) -> sid
+            snpos=pow2(2 * self.m_cap),    # (sid, sid) -> slot
+        )
+
+
+class EngineState(NamedTuple):
+    # per node
+    n2s: jax.Array      # int32[n_cap], -1 = unseen node
+    deg: jax.Array      # int32[n_cap]
+    minh: jax.Array     # int32[n_cap], min-hash cluster id (NO_CLUSTER if none)
+    # per supernode (sid space == node space)
+    ssize: jax.Array    # int32[n_cap]
+    sndeg: jax.Array    # int32[n_cap], |SN(sid)| (supernodes with E>0)
+    free: jax.Array     # int32[n_cap], free sid stack
+    free_top: jax.Array  # int32 scalar, #free sids
+    # tables
+    adj: HashTable
+    epos: HashTable
+    eab: HashTable
+    snadj: HashTable
+    snpos: HashTable
+    # scalars
+    phi: jax.Array        # int32
+    num_edges: jax.Array  # int32
+    step_no: jax.Array    # uint32, PRNG stream position
+    # counters for stats
+    n_trials: jax.Array
+    n_accept: jax.Array
+    n_skipped: jax.Array  # trials skipped by capacity guards (deviation audit)
+
+
+def new_state(cfg: EngineConfig) -> EngineState:
+    caps = cfg.table_caps()
+    n = cfg.n_cap
+    return EngineState(
+        n2s=jnp.full((n,), -1, jnp.int32),
+        deg=jnp.zeros((n,), jnp.int32),
+        minh=jnp.full((n,), NO_CLUSTER, jnp.int32),
+        ssize=jnp.zeros((n,), jnp.int32),
+        sndeg=jnp.zeros((n,), jnp.int32),
+        free=jnp.arange(n - 1, -1, -1, dtype=jnp.int32),
+        free_top=jnp.int32(n),
+        adj=ht_new(caps["adj"]),
+        epos=ht_new(caps["epos"]),
+        eab=ht_new(caps["eab"]),
+        snadj=ht_new(caps["snadj"]),
+        snpos=ht_new(caps["snpos"]),
+        phi=jnp.int32(0),
+        num_edges=jnp.int32(0),
+        step_no=jnp.uint32(cfg.seed),
+        n_trials=jnp.int32(0),
+        n_accept=jnp.int32(0),
+        n_skipped=jnp.int32(0),
+    )

@@ -1,0 +1,145 @@
+"""Batched trial engine: the jitted MoSSo step (Tier B).
+
+One ``step(state, batch)`` applies B stream changes and then runs, for every
+input node, the paper's trial loop (Alg. 1) in fixed shape:
+
+  1. TP(u): ``c`` uniform neighbor samples — O(1) each via the slot-indexed
+     adjacency (the TPU-native replacement of GetRandomNeighbor, Thm. 1-3).
+  2. TN filter: keep testing node w with probability 1/deg(w).
+  3. Corrective escape with probability ``e`` -> fresh singleton.
+  4. Otherwise CP(y) = TP(u) ∩ R(y) via min-hash equality; uniform candidate.
+  5. Accept iff the closed-form dphi <= 0 (Move if Saved, Stay otherwise).
+
+Capacity guards (deg <= d_cap, |SN| <= sn_cap) skip — never corrupt — trials
+that exceed the fixed shapes; skips are counted in ``n_skipped``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine.hashtable import ht_lookup_batch
+from repro.core.engine.ops import (alloc_sid, apply_move, delete_edge,
+                                   delta_phi_move, insert_edge, rnd_below,
+                                   rnd_u01, rnd_u32)
+from repro.core.engine.state import NO_CLUSTER, EngineConfig, EngineState
+
+
+def _one_trial(st: EngineState, y: jax.Array, tp: jax.Array,
+               tp_minh: jax.Array, seed: jax.Array, cfg: EngineConfig,
+               ) -> EngineState:
+    """Steps 3-5 of Alg. 1 for one testing node y."""
+    a = st.n2s[y]
+    esc = rnd_u01(seed, jnp.uint32(3)) <= cfg.escape
+
+    # candidate selection: CP(y) = TP(u) ∩ R(y) (min-hash cluster match)
+    my = st.minh[y]
+    cp_mask = (tp_minh == my) & (my != NO_CLUSTER)
+    n_cp = jnp.sum(cp_mask).astype(jnp.int32)
+    pick = rnd_below(seed, jnp.uint32(4), n_cp)
+    # index of the pick-th True in cp_mask
+    csum = jnp.cumsum(cp_mask.astype(jnp.int32)) - 1
+    zidx = jnp.argmax((csum == pick) & cp_mask)
+    z = tp[zidx]
+    cand_target = st.n2s[z]
+
+    fresh_sid = st.free[jnp.maximum(st.free_top - 1, 0)]
+    target = jnp.where(esc, fresh_sid, cand_target)
+
+    cap_ok = ((st.deg[y] <= cfg.d_cap)
+              & (st.sndeg[a] <= cfg.sn_cap)
+              & (esc | (st.sndeg[cand_target] <= cfg.sn_cap))
+              & ((~esc) | (st.free_top > 0)))
+    sem_ok = jnp.where(esc, st.ssize[a] > 1, (n_cp > 0) & (cand_target != a))
+    ok = cap_ok & sem_ok
+
+    def evaluate(st: EngineState) -> EngineState:
+        dphi, nbrs, nvalid = delta_phi_move(st, y, target, esc, cfg)
+        accept = dphi <= 0
+
+        def commit(st: EngineState) -> EngineState:
+            st = jax.lax.cond(esc, lambda s: alloc_sid(s)[0], lambda s: s, st)
+            st = apply_move(st, y, target, dphi, nbrs, nvalid)
+            return st._replace(n_accept=st.n_accept + 1)
+
+        st = jax.lax.cond(accept, commit, lambda s: s, st)
+        return st._replace(n_trials=st.n_trials + 1)
+
+    def skipped(st: EngineState) -> EngineState:
+        return st._replace(
+            n_trials=st.n_trials + 1,
+            n_skipped=st.n_skipped + jnp.where(~cap_ok, 1, 0).astype(jnp.int32))
+
+    return jax.lax.cond(ok, evaluate, skipped, st)
+
+
+def _trial_group(st: EngineState, u: jax.Array, seed: jax.Array,
+                 cfg: EngineConfig) -> EngineState:
+    """Steps 1-5 of Alg. 1 for one input node u."""
+
+    def run(st: EngineState) -> EngineState:
+        du = st.deg[u]
+        ks = jnp.arange(cfg.c, dtype=jnp.uint32)
+        ridx = jax.vmap(lambda k: rnd_below(seed, k * 8 + 1, du))(ks)
+        tp = ht_lookup_batch(st.adj, jnp.full((cfg.c,), u, jnp.int32), ridx,
+                             default=0)
+        tp_minh = st.minh[tp]
+
+        def body(k, st):
+            y = tp[k]
+            tseed = rnd_u32(seed, jnp.uint32(100) + k.astype(jnp.uint32))
+            # TN filter: testing prob 1/deg(w)  (Careful Selection (1))
+            keep = rnd_u01(tseed, jnp.uint32(2)) * st.deg[y].astype(jnp.float32) <= 1.0
+            return jax.lax.cond(
+                keep, lambda s: _one_trial(s, y, tp, tp_minh, tseed, cfg),
+                lambda s: s, st)
+
+        return jax.lax.fori_loop(0, cfg.c, body, st)
+
+    valid = (u >= 0) & (st.n2s[jnp.clip(u, 0)] >= 0) & (st.deg[jnp.clip(u, 0)] > 0)
+    return jax.lax.cond(valid, run, lambda s: s, st)
+
+
+def _apply_change(st: EngineState, u: jax.Array, v: jax.Array,
+                  ins: jax.Array, cfg: EngineConfig) -> EngineState:
+    valid = u >= 0
+    st = jax.lax.cond(valid & ins,
+                      lambda s: insert_edge(s, u, v, cfg.d_cap),
+                      lambda s: s, st)
+    st = jax.lax.cond(valid & (~ins),
+                      lambda s: delete_edge(s, u, v, cfg.d_cap),
+                      lambda s: s, st)
+    return st
+
+
+def step_fn(st: EngineState, u: jax.Array, v: jax.Array, ins: jax.Array,
+            cfg: EngineConfig) -> EngineState:
+    """One jitted engine step over a padded batch of changes.
+
+    Batch semantics (DESIGN.md deviation #3): all changes apply first, then
+    trial groups run for every endpoint in stream order.
+    """
+
+    def ap(st, ch):
+        return _apply_change(st, ch[0], ch[1], ch[2] != 0, cfg), None
+
+    changes = jnp.stack([u, v, ins.astype(jnp.int32)], axis=1)
+    st, _ = jax.lax.scan(ap, st, changes)
+
+    nodes = jnp.stack([u, v], axis=1).reshape(-1)  # u0,v0,u1,v1,...
+
+    def tg(st, xs):
+        node, idx = xs
+        seed = rnd_u32(st.step_no, idx.astype(jnp.uint32) * jnp.uint32(2654435761))
+        return _trial_group(st, node, seed, cfg), None
+
+    st, _ = jax.lax.scan(tg, st, (nodes, jnp.arange(nodes.shape[0], dtype=jnp.int32)))
+    return st._replace(step_no=st.step_no + jnp.uint32(1))
+
+
+def make_step(cfg: EngineConfig):
+    """Compile the engine step for a fixed config."""
+    return jax.jit(partial(step_fn, cfg=cfg))

@@ -1,0 +1,12 @@
+from repro.core.reference.algorithms import (ALGORITHMS, MoSSo, MoSSoGreedy,
+                                             MoSSoMCMC, MoSSoSimple,
+                                             StreamingSummarizer)
+from repro.core.reference.dynamic_summary import DynamicSummary
+from repro.core.reference.minhash import MinHashClusters
+from repro.core.reference.neighbor_sampler import get_random_neighbors
+
+__all__ = [
+    "ALGORITHMS", "MoSSo", "MoSSoGreedy", "MoSSoMCMC", "MoSSoSimple",
+    "StreamingSummarizer", "DynamicSummary", "MinHashClusters",
+    "get_random_neighbors",
+]

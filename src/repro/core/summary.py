@@ -1,0 +1,100 @@
+"""Shared lossless-summary primitives.
+
+The output representation of lossless graph summarization (Sect. 2.1 of the
+paper) is a summary graph ``G* = (S, P)`` plus edge corrections
+``C = (C+, C-)``.  The *optimal encoding* rule (Sect. 3.1) decides, per
+supernode pair {A, B}, whether the ``E_AB`` edges are cheaper listed verbatim
+in C+ (cost ``|E_AB|``) or as one superedge plus the missing pairs in C-
+(cost ``1 + |T_AB| - |E_AB|``).
+
+These closed forms are shared by the faithful reference implementation
+(:mod:`repro.core.reference`) and the batched JAX engine
+(:mod:`repro.core.engine`).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Set, Tuple
+
+Pair = Tuple[int, int]
+
+
+def pair_key(a: int, b: int) -> Pair:
+    """Canonical (unordered) supernode pair key."""
+    return (a, b) if a <= b else (b, a)
+
+
+def t_count(size_a: int, size_b: int, same: bool) -> int:
+    """|T_AB|: number of potential edges between supernodes of the given sizes."""
+    if same:
+        return size_a * (size_a - 1) // 2
+    return size_a * size_b
+
+
+def encoding_cost(e: int, t: int) -> int:
+    """Contribution of one supernode pair to phi under the optimal encoding.
+
+    C+ mode costs ``e``; superedge mode costs ``1 + t - e``.  The optimal rule
+    (Sect. 3.1) picks superedge iff ``e > (t + 1) / 2`` which is exactly the
+    argmin, so the cost is ``min(e, t - e + 1)`` (and 0 when no edge exists).
+    """
+    if e <= 0:
+        return 0
+    return min(e, t - e + 1)
+
+
+def is_superedge(e: int, t: int) -> bool:
+    """Optimal-encoding mode for a pair: superedge iff |E| > (|T|+1)/2."""
+    return 2 * e > t + 1
+
+
+@dataclass
+class SummaryOutput:
+    """A materialized output representation (used for tests / persistence)."""
+
+    supernodes: Dict[int, Set[int]]             # sid -> member nodes
+    superedges: Set[Pair]                       # P  (canonical sid pairs)
+    c_plus: Set[Pair]                           # C+ (canonical node pairs)
+    c_minus: Set[Pair]                          # C- (canonical node pairs)
+
+    @property
+    def phi(self) -> int:
+        return len(self.superedges) + len(self.c_plus) + len(self.c_minus)
+
+    def decode_edges(self) -> Set[Pair]:
+        """Losslessly recover E = (Ê ∪ C+) \\ C-  (Sect. 2.1)."""
+        node2sid = {}
+        for sid, mem in self.supernodes.items():
+            for u in mem:
+                node2sid[u] = sid
+        edges: Set[Pair] = set()
+        members = {sid: sorted(mem) for sid, mem in self.supernodes.items()}
+        for a, b in self.superedges:
+            if a == b:
+                mem = members[a]
+                for i, u in enumerate(mem):
+                    for v in mem[i + 1:]:
+                        edges.add(pair_key(u, v))
+            else:
+                for u in members[a]:
+                    for v in members[b]:
+                        edges.add(pair_key(u, v))
+        edges |= {pair_key(u, v) for (u, v) in self.c_plus}
+        edges -= {pair_key(u, v) for (u, v) in self.c_minus}
+        return edges
+
+    def node_count(self) -> int:
+        return sum(len(m) for m in self.supernodes.values())
+
+
+@dataclass
+class StreamStats:
+    """Per-run accounting used by benchmarks and EXPERIMENTS.md."""
+
+    changes: int = 0
+    insertions: int = 0
+    deletions: int = 0
+    trials: int = 0
+    accepted: int = 0
+    escapes: int = 0
+    phi_history: List[Tuple[int, int, int]] = field(default_factory=list)  # (t, phi, |E|)

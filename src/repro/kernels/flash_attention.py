@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: block online-softmax attention (train/prefill path).
+
+Classic FlashAttention tiling adapted to the TPU memory hierarchy:
+(BQ, D) query tiles stay VMEM-resident while (BK, D) key/value tiles stream
+through; the running max/denominator live in VREGs.  Tile sizes default to
+128 to match the MXU systolic array.  GQA is handled by mapping each query
+head to its kv group in the BlockSpec index maps (no jnp.repeat, so the KV
+tensor is never physically expanded — that is the TPU-native win over the
+naive path).
+
+Used by the LM architectures when running on TPU; the pure-jnp oracle in
+ref.py is the execution path on CPU and the semantics of record.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int,
+                 causal: bool, sm_scale: float, kv_len: int):
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * sm_scale        # [bq, d]
+
+    m = jnp.full((bq,), _NEG_INF, jnp.float32)
+    l = jnp.zeros((bq,), jnp.float32)
+    acc = jnp.zeros((bq, q.shape[-1]), jnp.float32)
+
+    n_kb = kv_len // bk
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = k_ref[0, 0, kb, :, :].astype(jnp.float32)      # [bk, d]
+        v = v_ref[0, 0, kb, :, :].astype(jnp.float32)
+        s = q @ k.T                                        # [bq, bk]
+        if causal:
+            qpos = qi * bq + jax.lax.iota(jnp.int32, bq)[:, None]
+            kpos = kb * bk + jax.lax.iota(jnp.int32, bk)[None, :]
+            s = jnp.where(qpos >= kpos, s, _NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        scale = jnp.exp(m - m_new)
+        l_new = l * scale + p.sum(axis=-1)
+        acc_new = acc * scale[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    if causal:
+        # skip key blocks entirely above the diagonal of this query block
+        last = (qi + 1) * bq
+        n_kb_eff = jnp.minimum((last + bk - 1) // bk, n_kb)
+        m, l, acc = jax.lax.fori_loop(0, n_kb_eff, body, (m, l, acc))
+    else:
+        m, l, acc = jax.lax.fori_loop(0, n_kb, body, (m, l, acc))
+
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 128, bk: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: [B, H, Tq, D]; k, v: [B, Hkv, Tk, D] with H % Hkv == 0."""
+    b, h, tq, d = q.shape
+    hkv, tk = k.shape[1], k.shape[2]
+    assert h % hkv == 0 and tq % bq == 0 and tk % bk == 0
+    group = h // hkv
+    sm_scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(_attn_kernel, bq=bq, bk=bk, causal=causal,
+                               sm_scale=sm_scale, kv_len=tk)
+    kr = k.reshape(b, hkv, tk // bk, bk, d)
+    vr = v.reshape(b, hkv, tk // bk, bk, d)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, tq // bq),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda ib, ih, iq: (ib, ih, iq, 0)),
+            # kv tile indexed by the query head's GQA group
+            pl.BlockSpec((1, 1, tk // bk, bk, d),
+                         lambda ib, ih, iq: (ib, ih // group, 0, 0, 0)),
+            pl.BlockSpec((1, 1, tk // bk, bk, d),
+                         lambda ib, ih, iq: (ib, ih // group, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda ib, ih, iq: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, tq, d), q.dtype),
+        interpret=interpret,
+    )(q, kr, vr)
+    return out

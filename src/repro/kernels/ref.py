@@ -1,0 +1,137 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` contract).
+
+These are the semantics of record: kernels must `allclose` against them in
+interpret mode across the shape/dtype sweeps in tests/test_kernels.py, and
+they are also the default execution path on non-TPU backends (so the whole
+framework runs and lowers on CPU).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_reduce_ref(senders: jax.Array, receivers: jax.Array,
+                       x: jax.Array, n_out: int, reduce: str = "sum",
+                       ) -> jax.Array:
+    """out[r] = reduce over edges e with receivers[e]==r of x[senders[e]]."""
+    msgs = x[senders]
+    if reduce == "sum":
+        return jax.ops.segment_sum(msgs, receivers, num_segments=n_out)
+    if reduce == "min":
+        out = jax.ops.segment_min(msgs, receivers, num_segments=n_out)
+    elif reduce == "max":
+        out = jax.ops.segment_max(msgs, receivers, num_segments=n_out)
+    else:
+        raise ValueError(reduce)
+    return jnp.where(jnp.isfinite(out), out, 0.0)
+
+
+def summary_spmm_ref(x: jax.Array, n2s: jax.Array, n_super: int,
+                     p_src: jax.Array, p_dst: jax.Array,
+                     cp_src: jax.Array, cp_dst: jax.Array,
+                     cm_src: jax.Array, cm_dst: jax.Array,
+                     self_loop_super: jax.Array) -> jax.Array:
+    """Neighborhood aggregation  Y = A @ X  *from the summary representation*.
+
+    A is never materialized:  Y[u] = sum over superedges {S_u, B} of
+    sum_{v in B} X[v]  (+ intra-supernode clique when (S_u,S_u) in P,
+    excluding u itself)  + C+ contributions - C- contributions.
+
+    Arguments are directed edge lists: superedges appear in both directions
+    in (p_src, p_dst) except self-pairs, which are flagged per-supernode in
+    ``self_loop_super`` (bool[n_super]).  C+/C- node pairs appear in both
+    directions.
+    """
+    z = jax.ops.segment_sum(x, n2s, num_segments=n_super)     # supernode sums
+    w = jax.ops.segment_sum(z[p_src], p_dst, num_segments=n_super)
+    y = w[n2s]
+    # self superedge (A,A): u gets (Z[A] - X[u])
+    self_mask = self_loop_super[n2s][:, None]
+    y = y + jnp.where(self_mask, z[n2s] - x, 0.0)
+    y = y + jax.ops.segment_sum(x[cp_src], cp_dst, num_segments=x.shape[0])
+    y = y - jax.ops.segment_sum(x[cm_src], cm_dst, num_segments=x.shape[0])
+    return y
+
+
+def dense_spmm_ref(senders: jax.Array, receivers: jax.Array, x: jax.Array,
+                   ) -> jax.Array:
+    """Plain edge-list A @ X (oracle for summary_spmm equivalence tests)."""
+    return jax.ops.segment_sum(x[senders], receivers, num_segments=x.shape[0])
+
+
+def embedding_bag_ref(table: jax.Array, indices: jax.Array,
+                      offsets: jax.Array, mode: str = "sum") -> jax.Array:
+    """torch.nn.EmbeddingBag semantics with jnp.take + segment_sum.
+
+    indices: int32[nnz] flat lookup ids; offsets: int32[B+1] bag boundaries.
+    """
+    b = offsets.shape[0] - 1
+    bag_ids = jnp.searchsorted(offsets, jnp.arange(indices.shape[0]),
+                               side="right") - 1
+    rows = jnp.take(table, indices, axis=0)
+    summed = jax.ops.segment_sum(rows, bag_ids, num_segments=b)
+    if mode == "sum":
+        return summed
+    counts = jnp.maximum(offsets[1:] - offsets[:-1], 1)
+    return summed / counts[:, None].astype(summed.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True,
+                        bias: Optional[jax.Array] = None,
+                        q_chunk: int = 1024) -> jax.Array:
+    """Reference multi-head attention. q: [B,H,Tq,D], k/v: [B,Hkv,Tk,D].
+
+    Long query lengths are processed in chunks (scan over q blocks) so the
+    [Tq, Tk] score matrix is never fully materialized — this keeps the 32k
+    prefill cells lowerable on any backend and bounds activation memory in
+    the dry-run's memory_analysis.
+    """
+    b, h, tq, d = q.shape
+    hkv = k.shape[1]
+    if hkv != h:  # GQA: broadcast kv heads over query groups
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    tk = k.shape[2]
+
+    def block(qb, qpos):
+        scores = jnp.einsum("bhqd,bhkd->bhqk", qb, k) / jnp.sqrt(d).astype(q.dtype)
+        scores = scores.astype(jnp.float32)
+        if bias is not None:
+            scores = scores + bias
+        if causal:
+            mask = qpos[:, None] + (tk - tq) >= jnp.arange(tk)[None, :]
+            scores = jnp.where(mask, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v)
+
+    if tq <= q_chunk or tq % q_chunk:
+        return block(q, jnp.arange(tq))
+
+    n_chunks = tq // q_chunk
+    qr = q.reshape(b, h, n_chunks, q_chunk, d).transpose(2, 0, 1, 3, 4)
+
+    _, out = jax.lax.scan(
+        lambda c, i: ((), block(qr[i], i * q_chunk + jnp.arange(q_chunk))),
+        (), jnp.arange(n_chunks))
+    dv = v.shape[-1]   # MLA attends over the latent: d_v != d_q
+    return out.transpose(1, 2, 0, 3, 4).reshape(b, h, tq, dv)
+
+
+def minhash_signature_ref(senders: jax.Array, receivers: jax.Array,
+                          n_nodes: int, seed: int = 0) -> jax.Array:
+    """Min-hash cluster signature per node: min over neighbors of hash(nbr)."""
+    h = _mixhash(senders.astype(jnp.uint32), jnp.uint32(seed)).astype(jnp.float32)
+    out = jax.ops.segment_min(h, receivers, num_segments=n_nodes)
+    return jnp.where(jnp.isfinite(out), out, jnp.float32(2**31 - 1)).astype(jnp.int32)
+
+
+def _mixhash(x: jax.Array, seed: jax.Array) -> jax.Array:
+    h = x * jnp.uint32(0x9E3779B9) + seed
+    h = (h ^ (h >> 16)) * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    return h & jnp.uint32(0x7FFFFFFE)

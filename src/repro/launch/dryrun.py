@@ -1,0 +1,132 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (GSPMD partitions the step),
+  * the per-device memory fits (``compiled.memory_analysis()``),
+  * and extracts the roofline terms (§Roofline) from ``cost_analysis()`` +
+    the collective schedule parsed from the post-SPMD HLO.
+
+Results are cached incrementally under benchmarks/results/dryrun/ so the
+full 40-cell sweep is resumable.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-405b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--force]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED, REGISTRY
+from repro.launch.mesh import chips, make_production_mesh
+from repro.launch.roofline import collective_bytes, roofline_terms
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool = False,
+             allow_skipped: bool = False, verbose: bool = True) -> dict:
+    from repro.launch.steps import build  # late import: after XLA_FLAGS
+
+    spec = REGISTRY[arch]
+    cell = spec.cell(shape)
+    tag = f"{arch}/{shape}/{'pod2' if multi_pod else 'pod1'}"
+    if cell.skip and not allow_skipped:
+        return dict(arch=arch, shape=shape, multi_pod=multi_pod,
+                    status="skipped", note=cell.note)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    fn, args, in_sh, out_sh = build(spec, cell, mesh)
+    jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+    lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    coll = collective_bytes(hlo)
+    terms = roofline_terms(cost, coll, chips(mesh))
+
+    mem_info = {}
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "generated_code_size_in_bytes"):
+        mem_info[attr] = int(getattr(mem, attr, 0) or 0)
+
+    res = dict(arch=arch, shape=shape, multi_pod=multi_pod, status="ok",
+               kind=cell.kind, chips=chips(mesh),
+               t_lower_s=round(t_lower, 1), t_compile_s=round(t_compile, 1),
+               memory=mem_info, cost=dict(
+                   flops=float(cost.get("flops", 0.0)),
+                   bytes_accessed=float(cost.get("bytes accessed", 0.0))),
+               collectives=coll, roofline=terms, note=cell.note)
+    if verbose:
+        per_dev = (mem_info["argument_size_in_bytes"]
+                   + mem_info["temp_size_in_bytes"]) / 1e9
+        print(f"[{tag}] ok lower={t_lower:.0f}s compile={t_compile:.0f}s "
+              f"mem/dev={per_dev:.2f}GB dominant={terms['dominant']} "
+              f"t=({terms['t_compute']:.2e},{terms['t_memory']:.2e},"
+              f"{terms['t_collective']:.2e})s")
+    return res
+
+
+def _cache_path(arch, shape, multi_pod):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return os.path.join(
+        RESULTS_DIR, f"{arch}__{shape}__{'pod2' if multi_pod else 'pod1'}.json")
+
+
+def run_all(multi_pod: bool, force: bool = False, archs=None) -> None:
+    archs = archs or ASSIGNED
+    for arch in archs:
+        for cell in REGISTRY[arch].cells:
+            path = _cache_path(arch, cell.name, multi_pod)
+            if os.path.exists(path) and not force:
+                print(f"[{arch}/{cell.name}] cached")
+                continue
+            try:
+                res = run_cell(arch, cell.name, multi_pod)
+            except Exception as e:  # record failures, keep sweeping
+                res = dict(arch=arch, shape=cell.name, multi_pod=multi_pod,
+                           status="error", error=f"{type(e).__name__}: {e}",
+                           tb=traceback.format_exc()[-2000:])
+                print(f"[{arch}/{cell.name}] ERROR {e}")
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--allow-full-attn-500k", action="store_true")
+    args = ap.parse_args()
+    if args.all:
+        run_all(args.multi_pod, args.force)
+        return
+    res = run_cell(args.arch, args.shape, args.multi_pod,
+                   allow_skipped=args.allow_full_attn_500k)
+    path = _cache_path(args.arch, args.shape, args.multi_pod)
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    print(json.dumps({k: v for k, v in res.items() if k != "tb"}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

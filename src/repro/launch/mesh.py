@@ -1,0 +1,34 @@
+"""Production mesh definitions (TPU v5e pods).
+
+Single pod = 16x16 = 256 chips, axes ("data", "model").
+Multi-pod   = 2x16x16 = 512 chips, axes ("pod", "data", "model") — the pod
+axis carries data parallelism (and joins the FSDP group for archs that set
+``fsdp_axes=("pod", "data")``).
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+# hardware constants used by the roofline analysis (TPU v5e)
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist locally, as a 1-D ('data',) mesh (tests/CPU)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
+def chips(mesh) -> int:
+    return mesh.devices.size

@@ -1,0 +1,81 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+  memory term     = HLO_bytes / (chips x HBM_bw)
+  collective term = collective_bytes / (chips x link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are not
+reported there, so we parse the post-SPMD HLO text and sum the output-tensor
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (including -start async forms).  Output-size is the
+standard proxy for wire bytes (exact for all-reduce/permute, upper bound for
+all-gather, lower for reduce-scatter); noted in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        b = _DTYPE_BYTES.get(dtype)
+        if b is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * b
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output bytes per collective kind over the whole module."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s]+?)\s+([\w\-]+)\(",
+                     line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        for kind in _COLLECTIVES:
+            if op == kind or op == kind + "-start":
+                out[kind] += _shape_bytes(shape_str)
+    return out
+
+
+def roofline_terms(cost: dict, coll: Dict[str, int], n_chips: int) -> dict:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    cbytes = float(sum(coll.values()))
+    # cost_analysis is per-partition (post-SPMD) in jax; treat as per-device
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = byts / HBM_BW
+    t_collective = cbytes / ICI_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_collective)), key=lambda kv: kv[1])[0]
+    return dict(flops=flops, bytes=byts, collective_bytes=cbytes,
+                t_compute=t_compute, t_memory=t_memory,
+                t_collective=t_collective, dominant=dominant,
+                n_chips=n_chips)
+
+
+def model_flops(n_params_active: int, tokens: int) -> float:
+    """MODEL_FLOPS = 6 * N * D (dense) / 6 * N_active * D (MoE)."""
+    return 6.0 * n_params_active * tokens

@@ -1,0 +1,312 @@
+"""Assigned GNN architectures over a common edge-list GraphBatch.
+
+All four archs (graphsage-reddit, egnn, dimenet, graphcast) consume the same
+fixed-shape batch so every (arch × graph-shape) dry-run cell is well defined.
+Message passing is `jax.ops.segment_sum` over an edge index (the JAX-native
+SpMM per kernel_taxonomy §B.3/§B.11), routed through repro.kernels.ops so the
+Pallas path engages on TPU.  The graph-summarization integration
+(summary_spmm) is exposed for sum/mean-aggregating archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import annotate
+from repro.kernels import ops
+from repro.models.common import dense_init, layer_norm
+
+Params = Dict[str, Any]
+
+
+class GraphBatch(NamedTuple):
+    """Fixed-shape graph sample (padded; masks mark live entries)."""
+    node_feat: jax.Array            # f32[N, F]
+    senders: jax.Array              # i32[E]
+    receivers: jax.Array            # i32[E]
+    edge_mask: jax.Array            # bool[E]
+    node_mask: jax.Array            # bool[N]
+    labels: jax.Array               # i32[N] (node class) or f32[N, dy]
+    coords: Optional[jax.Array] = None      # f32[N, 3] (egnn/dimenet)
+    triplet_kj: Optional[jax.Array] = None  # i32[T] edge ids (dimenet)
+    triplet_ji: Optional[jax.Array] = None  # i32[T]
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str = "gnn"
+    arch: str = "graphsage"     # graphsage | egnn | dimenet | graphcast
+    n_layers: int = 2
+    d_hidden: int = 128
+    d_in: int = 128
+    n_classes: int = 16
+    # dimenet
+    n_rbf: int = 6
+    n_sbf: int = 7
+    n_bilinear: int = 8
+    # graphcast
+    n_mesh_frac: int = 4        # mesh nodes = N // n_mesh_frac
+    aggregator: str = "sum"
+    param_dtype: Any = jnp.float32
+
+
+def _mlp_init(key, dims, dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [{"w": dense_init(k, (a, b), dtype=dtype), "b": jnp.zeros((b,), dtype)}
+            for k, a, b in zip(ks, dims[:-1], dims[1:])]
+
+
+def _mlp(layers, x, act=jax.nn.silu):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i + 1 < len(layers):
+            x = act(x)
+    return x
+
+
+def _agg(senders, receivers, msgs, n, mode="sum"):
+    out = jax.ops.segment_sum(msgs, receivers, num_segments=n)
+    if mode == "mean":
+        deg = jax.ops.segment_sum(jnp.ones_like(receivers, msgs.dtype),
+                                  receivers, num_segments=n)
+        out = out / jnp.maximum(deg, 1)[:, None]
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# GraphSAGE (mean aggregator)
+# --------------------------------------------------------------------------- #
+
+
+def init_graphsage(cfg: GNNConfig, key) -> Params:
+    ks = jax.random.split(key, cfg.n_layers + 1)
+    dims = [cfg.d_in] + [cfg.d_hidden] * cfg.n_layers
+    layers = []
+    for i in range(cfg.n_layers):
+        k1, k2 = jax.random.split(ks[i])
+        layers.append({
+            "w_self": dense_init(k1, (dims[i], dims[i + 1]), dtype=cfg.param_dtype),
+            "w_nbr": dense_init(k2, (dims[i], dims[i + 1]), dtype=cfg.param_dtype),
+        })
+    return {"layers": layers,
+            "head": dense_init(ks[-1], (cfg.d_hidden, cfg.n_classes),
+                               dtype=cfg.param_dtype)}
+
+
+def graphsage_forward(params: Params, g: GraphBatch, cfg: GNNConfig) -> jax.Array:
+    h = g.node_feat
+    n = h.shape[0]
+    w = g.edge_mask[:, None].astype(h.dtype)
+    deg = jax.ops.segment_sum(g.edge_mask.astype(h.dtype), g.receivers,
+                              num_segments=n)
+    inv_deg = (1.0 / jnp.maximum(deg, 1.0))[:, None]
+    for l in params["layers"]:
+        # Algebraic scheduling (EXPERIMENTS.md §Perf H4): mean-aggregation
+        # commutes with the linear map, so project BEFORE gathering whenever
+        # d_out < d_in — the edge gather/scatter then moves d_out-wide rows
+        # (4.7x fewer bytes on the 602-feature reddit shapes, 11x on cora).
+        # (The feature-sharded-constraint variant was measured and REFUTED:
+        # GSPMD materializes full-width partial sums — see §Perf log.)
+        if l["w_nbr"].shape[1] < h.shape[1]:
+            z = h @ l["w_nbr"]
+            msgs = z[g.senders] * w
+            agg = _agg(g.senders, g.receivers, msgs, n, "sum") * inv_deg
+        else:
+            msgs = h[g.senders] * w
+            agg = (_agg(g.senders, g.receivers, msgs, n, "sum")
+                   * inv_deg) @ l["w_nbr"]
+        h = jax.nn.relu(h @ l["w_self"] + agg)
+        h = h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6)
+    return h @ params["head"]
+
+
+# --------------------------------------------------------------------------- #
+# EGNN (E(n)-equivariant)
+# --------------------------------------------------------------------------- #
+
+
+def init_egnn(cfg: GNNConfig, key) -> Params:
+    ks = jax.random.split(key, cfg.n_layers * 3 + 2)
+    d = cfg.d_hidden
+    layers = []
+    for i in range(cfg.n_layers):
+        layers.append({
+            "phi_e": _mlp_init(ks[3 * i], [2 * d + 1, d, d], cfg.param_dtype),
+            "phi_x": _mlp_init(ks[3 * i + 1], [d, d, 1], cfg.param_dtype),
+            "phi_h": _mlp_init(ks[3 * i + 2], [2 * d, d, d], cfg.param_dtype),
+        })
+    return {"embed": dense_init(ks[-2], (cfg.d_in, d), dtype=cfg.param_dtype),
+            "layers": layers,
+            "head": dense_init(ks[-1], (d, cfg.n_classes), dtype=cfg.param_dtype)}
+
+
+def egnn_forward(params: Params, g: GraphBatch, cfg: GNNConfig) -> jax.Array:
+    h = g.node_feat @ params["embed"]
+    x = g.coords
+    n = h.shape[0]
+    w = g.edge_mask[:, None].astype(h.dtype)
+    for l in params["layers"]:
+        diff = x[g.senders] - x[g.receivers]
+        d2 = jnp.sum(diff * diff, axis=-1, keepdims=True)
+        m = _mlp(l["phi_e"], jnp.concatenate(
+            [h[g.senders], h[g.receivers], d2], axis=-1)) * w
+        xw = jnp.tanh(_mlp(l["phi_x"], m))          # bounded coord gate
+        x = x + _agg(g.senders, g.receivers, diff * xw * w, n) / (n + 1)
+        magg = _agg(g.senders, g.receivers, m, n)
+        h = h + _mlp(l["phi_h"], jnp.concatenate([h, magg], axis=-1))
+    return h @ params["head"]
+
+
+# --------------------------------------------------------------------------- #
+# DimeNet (directional message passing with RBF/SBF bases)
+# --------------------------------------------------------------------------- #
+
+
+def _rbf(d, n_rbf, cutoff=5.0):
+    """Bessel-style radial basis."""
+    freq = jnp.arange(1, n_rbf + 1, dtype=jnp.float32) * jnp.pi
+    dn = jnp.clip(d / cutoff, 1e-4, 1.0)
+    return jnp.sin(freq * dn[..., None]) / dn[..., None]
+
+
+def _sbf(angle, n_sbf):
+    k = jnp.arange(n_sbf, dtype=jnp.float32)
+    return jnp.cos(angle[..., None] * (k + 1.0))
+
+
+def init_dimenet(cfg: GNNConfig, key) -> Params:
+    ks = jax.random.split(key, cfg.n_layers * 4 + 3)
+    d = cfg.d_hidden
+    blocks = []
+    for i in range(cfg.n_layers):
+        blocks.append({
+            "w_rbf": dense_init(ks[4 * i], (cfg.n_rbf, d), dtype=cfg.param_dtype),
+            "w_sbf": dense_init(ks[4 * i + 1], (cfg.n_sbf, cfg.n_bilinear),
+                                dtype=cfg.param_dtype),
+            "bilinear": dense_init(ks[4 * i + 2], (cfg.n_bilinear, d, d),
+                                   scale=0.1, dtype=cfg.param_dtype),
+            "upd": _mlp_init(ks[4 * i + 3], [2 * d, d, d], cfg.param_dtype),
+        })
+    return {"embed": dense_init(ks[-3], (cfg.d_in, d), dtype=cfg.param_dtype),
+            "msg0": _mlp_init(ks[-2], [2 * d + cfg.n_rbf, d, d], cfg.param_dtype),
+            "blocks": blocks,
+            "head": dense_init(ks[-1], (d, cfg.n_classes), dtype=cfg.param_dtype)}
+
+
+def dimenet_forward(params: Params, g: GraphBatch, cfg: GNNConfig) -> jax.Array:
+    h = g.node_feat @ params["embed"]
+    n = h.shape[0]
+    diff = g.coords[g.senders] - g.coords[g.receivers]
+    dist = jnp.sqrt(jnp.sum(diff * diff, axis=-1) + 1e-9)
+    rbf = _rbf(dist, cfg.n_rbf)
+    w = g.edge_mask[:, None].astype(h.dtype)
+    m = _mlp(params["msg0"], jnp.concatenate(
+        [h[g.senders], h[g.receivers], rbf], axis=-1)) * w  # per-edge message
+
+    for blk in params["blocks"]:
+        # triplet interaction: edge (k->j) modulates edge (j->i) through the
+        # angle between them (the quadratic gather regime of §B.3).
+        tkj, tji = g.triplet_kj, g.triplet_ji
+        d_kj, d_ji = diff[tkj], diff[tji]
+        cosang = jnp.sum(d_kj * d_ji, axis=-1) / (
+            jnp.linalg.norm(d_kj, axis=-1) * jnp.linalg.norm(d_ji, axis=-1) + 1e-9)
+        sbf = _sbf(jnp.arccos(jnp.clip(cosang, -1 + 1e-6, 1 - 1e-6)), cfg.n_sbf)
+        basis = sbf @ blk["w_sbf"]                          # [T, n_bilinear]
+        inter = jnp.einsum("tb,bio,ti->to", basis, blk["bilinear"], m[tkj])
+        t_agg = jax.ops.segment_sum(inter, tji, num_segments=m.shape[0])
+        gate = rbf @ blk["w_rbf"]
+        m = m + _mlp(blk["upd"], jnp.concatenate([m * gate, t_agg], axis=-1)) * w
+    out = _agg(g.senders, g.receivers, m, n)
+    return out @ params["head"]
+
+
+# --------------------------------------------------------------------------- #
+# GraphCast-style encoder-processor-decoder
+# --------------------------------------------------------------------------- #
+
+
+def init_graphcast(cfg: GNNConfig, key) -> Params:
+    ks = jax.random.split(key, cfg.n_layers * 2 + 5)
+    d = cfg.d_hidden
+    proc = []
+    for i in range(cfg.n_layers):
+        proc.append({
+            "edge": _mlp_init(ks[2 * i], [3 * d, d, d], cfg.param_dtype),
+            "node": _mlp_init(ks[2 * i + 1], [2 * d, d, d], cfg.param_dtype),
+            "ln_e": jnp.ones((d,), cfg.param_dtype),
+            "ln_n": jnp.ones((d,), cfg.param_dtype),
+        })
+    return {
+        "grid_embed": dense_init(ks[-5], (cfg.d_in, d), dtype=cfg.param_dtype),
+        "g2m": _mlp_init(ks[-4], [2 * d, d, d], cfg.param_dtype),
+        "processor": proc,
+        "m2g": _mlp_init(ks[-3], [2 * d, d, d], cfg.param_dtype),
+        "head": dense_init(ks[-1], (d, cfg.n_classes), dtype=cfg.param_dtype),
+    }
+
+
+def graphcast_forward(params: Params, g: GraphBatch, cfg: GNNConfig) -> jax.Array:
+    """Encode grid->mesh, process on the mesh, decode mesh->grid.
+
+    The assigned generic graph shapes are mapped onto GraphCast's
+    encode-process-decode skeleton: mesh nodes are the first N//n_mesh_frac
+    node ids, grid2mesh/mesh2mesh edges are the provided edges folded into
+    the mesh id range (documented in DESIGN.md §Arch-applicability).
+    """
+    n = g.node_feat.shape[0]
+    nm = max(1, n // cfg.n_mesh_frac)
+    h_grid = g.node_feat @ params["grid_embed"]
+    w = g.edge_mask[:, None].astype(h_grid.dtype)
+
+    # encoder: grid -> mesh
+    mesh_rcv = g.receivers % nm
+    msgs = _mlp(params["g2m"], jnp.concatenate(
+        [h_grid[g.senders], h_grid[mesh_rcv]], axis=-1)) * w
+    h_mesh = _agg(g.senders, mesh_rcv, msgs, nm, cfg.aggregator)
+
+    # processor: n_layers of residual message passing on the mesh
+    ms, mr = g.senders % nm, g.receivers % nm
+    e_feat = jnp.zeros((g.senders.shape[0], h_mesh.shape[1]), h_mesh.dtype)
+    for blk in params["processor"]:
+        e_in = jnp.concatenate([e_feat, h_mesh[ms], h_mesh[mr]], axis=-1)
+        e_feat = e_feat + layer_norm(_mlp(blk["edge"], e_in) * w, blk["ln_e"],
+                                     jnp.zeros_like(blk["ln_e"]))
+        agg = _agg(ms, mr, e_feat * w, nm, cfg.aggregator)
+        n_in = jnp.concatenate([h_mesh, agg], axis=-1)
+        h_mesh = h_mesh + layer_norm(_mlp(blk["node"], n_in), blk["ln_n"],
+                                     jnp.zeros_like(blk["ln_n"]))
+
+    # decoder: mesh -> grid
+    msgs = _mlp(params["m2g"], jnp.concatenate(
+        [h_mesh[ms], h_grid[g.receivers]], axis=-1)) * w
+    h_out = h_grid + _agg(ms, g.receivers, msgs, n, cfg.aggregator)
+    return h_out @ params["head"]
+
+
+# --------------------------------------------------------------------------- #
+# dispatch table + loss
+# --------------------------------------------------------------------------- #
+
+GNN_INITS = {"graphsage": init_graphsage, "egnn": init_egnn,
+             "dimenet": init_dimenet, "graphcast": init_graphcast}
+GNN_FORWARDS = {"graphsage": graphsage_forward, "egnn": egnn_forward,
+                "dimenet": dimenet_forward, "graphcast": graphcast_forward}
+
+
+def init_gnn(cfg: GNNConfig, key) -> Params:
+    return GNN_INITS[cfg.arch](cfg, key)
+
+
+def gnn_forward(params: Params, g: GraphBatch, cfg: GNNConfig) -> jax.Array:
+    return GNN_FORWARDS[cfg.arch](params, g, cfg)
+
+
+def gnn_loss(params: Params, g: GraphBatch, cfg: GNNConfig) -> jax.Array:
+    logits = gnn_forward(params, g, cfg).astype(jnp.float32)
+    nll = -jax.nn.log_softmax(logits)[
+        jnp.arange(logits.shape[0]), g.labels.astype(jnp.int32)]
+    m = g.node_mask.astype(jnp.float32)
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1)

@@ -1,0 +1,110 @@
+"""SASRec (self-attentive sequential recommendation, arXiv:1808.09781).
+
+Item-embedding table (the huge-sparse-table regime of kernel_taxonomy §B.6)
++ 2 causal self-attention blocks over length-50 user histories.  Four
+serving shapes are first-class: train (in-batch BCE with sampled negatives),
+online p99 scoring, offline bulk scoring, and 1M-candidate retrieval
+(batched dot, never a loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.common import dense_init, layer_norm
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class SASRecConfig:
+    name: str = "sasrec"
+    n_items: int = 1_000_000
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    dropout: float = 0.0
+    param_dtype: Any = jnp.float32
+
+
+def init_sasrec(cfg: SASRecConfig, key) -> Params:
+    ks = jax.random.split(key, 2 + 6 * cfg.n_blocks)
+    d = cfg.embed_dim
+    blocks = []
+    for i in range(cfg.n_blocks):
+        b = ks[2 + 6 * i: 2 + 6 * (i + 1)]
+        blocks.append({
+            "wq": dense_init(b[0], (d, d), dtype=cfg.param_dtype),
+            "wk": dense_init(b[1], (d, d), dtype=cfg.param_dtype),
+            "wv": dense_init(b[2], (d, d), dtype=cfg.param_dtype),
+            "wo": dense_init(b[3], (d, d), dtype=cfg.param_dtype),
+            "ff1": dense_init(b[4], (d, d), dtype=cfg.param_dtype),
+            "ff2": dense_init(b[5], (d, d), dtype=cfg.param_dtype),
+            "ln1": jnp.ones((d,), cfg.param_dtype),
+            "ln2": jnp.ones((d,), cfg.param_dtype),
+        })
+    return {
+        "item_emb": dense_init(ks[0], (cfg.n_items, d), scale=d ** -0.5,
+                               dtype=cfg.param_dtype),
+        "pos_emb": dense_init(ks[1], (cfg.seq_len, d), scale=0.02,
+                              dtype=cfg.param_dtype),
+        "blocks": blocks,
+        "ln_f": jnp.ones((d,), cfg.param_dtype),
+    }
+
+
+def encode(params: Params, seq: jax.Array, cfg: SASRecConfig) -> jax.Array:
+    """seq: int32[B, L] item ids (0 = padding) -> representations [B, L, D]."""
+    b, L = seq.shape
+    h = params["item_emb"][seq] + params["pos_emb"][None, :L]
+    pad = (seq == 0)[..., None]
+    h = jnp.where(pad, 0.0, h)
+    nh = cfg.n_heads
+    dh = cfg.embed_dim // nh
+    for blk in params["blocks"]:
+        x = layer_norm(h, blk["ln1"], jnp.zeros_like(blk["ln1"]))
+        q = (x @ blk["wq"]).reshape(b, L, nh, dh).transpose(0, 2, 1, 3)
+        k = (x @ blk["wk"]).reshape(b, L, nh, dh).transpose(0, 2, 1, 3)
+        v = (x @ blk["wv"]).reshape(b, L, nh, dh).transpose(0, 2, 1, 3)
+        ctx = ops.attention(q, k, v, causal=True)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(b, L, cfg.embed_dim)
+        h = h + ctx @ blk["wo"]
+        x = layer_norm(h, blk["ln2"], jnp.zeros_like(blk["ln2"]))
+        h = h + jax.nn.relu(x @ blk["ff1"]) @ blk["ff2"]
+        h = jnp.where(pad, 0.0, h)
+    return layer_norm(h, params["ln_f"], jnp.zeros_like(params["ln_f"]))
+
+
+def train_loss(params: Params, seq: jax.Array, pos: jax.Array,
+               neg: jax.Array, cfg: SASRecConfig) -> jax.Array:
+    """BCE over (positive next item, sampled negative) per position."""
+    h = encode(params, seq, cfg)
+    pe = params["item_emb"][pos]
+    ne = params["item_emb"][neg]
+    pos_logit = jnp.sum(h * pe, axis=-1).astype(jnp.float32)
+    neg_logit = jnp.sum(h * ne, axis=-1).astype(jnp.float32)
+    mask = (pos != 0).astype(jnp.float32)
+    loss = (jax.nn.softplus(-pos_logit) + jax.nn.softplus(neg_logit)) * mask
+    return jnp.sum(loss) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def score_candidates(params: Params, seq: jax.Array, candidates: jax.Array,
+                     cfg: SASRecConfig) -> jax.Array:
+    """User-state vs candidate scores: [B, L] x i32[C] -> f32[B, C].
+
+    The retrieval_cand shape (B=1, C=1e6) is one [1, D] @ [D, C] GEMM.
+    """
+    h = encode(params, seq, cfg)[:, -1]                  # [B, D]
+    emb = params["item_emb"][candidates]                 # [C, D]
+    return (h @ emb.T).astype(jnp.float32)
+
+
+def serve_topk(params: Params, seq: jax.Array, candidates: jax.Array,
+               cfg: SASRecConfig, k: int = 10) -> Tuple[jax.Array, jax.Array]:
+    scores = score_candidates(params, seq, candidates, cfg)
+    return jax.lax.top_k(scores, k)

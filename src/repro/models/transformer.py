@@ -1,0 +1,391 @@
+"""LM transformer family: dense GQA, MLA (MiniCPM3/DeepSeek-style), MoE.
+
+One configurable decoder-only stack covers the five assigned LM archs.
+Layer parameters are stacked on a leading [L] axis and consumed with
+``lax.scan`` (small HLO, tractable 512-device compiles) with a configurable
+remat policy.  Serving uses a KV cache; MLA caches the *compressed* latent
+(the paper-arch's signature memory win) with matrix-absorbed decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import annotate
+from repro.kernels import ops
+from repro.models.common import (apply_rope, cross_entropy, dense_init,
+                                 rms_norm)
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str = "lm"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_head: int = 64
+    d_ff: int = 1024
+    vocab: int = 1024
+    max_seq: int = 8192
+    attn: str = "gqa"          # "gqa" | "mla"
+    # MoE (n_experts == 0 -> dense FFN)
+    n_experts: int = 0
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    # MLA dims
+    q_lora: int = 0            # 0 = full-rank q
+    kv_lora: int = 256
+    rope_dim: int = 32
+    nope_dim: int = 64
+    v_head_dim: int = 64
+    # vocab padding: shard-friendly tables (Megatron's
+    # make-vocab-size-divisible-by); padded logits are masked to -inf.
+    pad_vocab_to: int = 256
+    # numerics
+    param_dtype: Any = jnp.bfloat16
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    remat_policy: str = "full"   # full | dots (save matmul outputs)
+    seq_shard: bool = True       # sequence-shard the residual stream (SP)
+    # parallelism hints consumed by repro.dist.sharding
+    fsdp_axes: Tuple[str, ...] = ("data",)
+
+    @property
+    def moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def vocab_padded(self) -> int:
+        m = max(self.pad_vocab_to, 1)
+        return (self.vocab + m - 1) // m * m
+
+
+# --------------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------------- #
+
+
+def _layer_init(cfg: TransformerConfig, key) -> Params:
+    ks = jax.random.split(key, 16)
+    d, dt = cfg.d_model, cfg.param_dtype
+    p: Params = {
+        "ln_attn": jnp.ones((d,), dt),
+        "ln_ffn": jnp.ones((d,), dt),
+        "o_proj": dense_init(ks[3], (cfg.n_heads * _vdim(cfg), d), dtype=dt),
+    }
+    if cfg.attn == "gqa":
+        p["q_proj"] = dense_init(ks[0], (d, cfg.n_heads * cfg.d_head), dtype=dt)
+        p["k_proj"] = dense_init(ks[1], (d, cfg.n_kv_heads * cfg.d_head), dtype=dt)
+        p["v_proj"] = dense_init(ks[2], (d, cfg.n_kv_heads * cfg.d_head), dtype=dt)
+    else:  # MLA
+        qd = cfg.nope_dim + cfg.rope_dim
+        if cfg.q_lora:
+            p["q_a"] = dense_init(ks[0], (d, cfg.q_lora), dtype=dt)
+            p["q_a_norm"] = jnp.ones((cfg.q_lora,), dt)
+            p["q_b"] = dense_init(ks[4], (cfg.q_lora, cfg.n_heads * qd), dtype=dt)
+        else:
+            p["q_proj"] = dense_init(ks[0], (d, cfg.n_heads * qd), dtype=dt)
+        p["kv_a"] = dense_init(ks[1], (d, cfg.kv_lora + cfg.rope_dim), dtype=dt)
+        p["kv_a_norm"] = jnp.ones((cfg.kv_lora,), dt)
+        p["k_b"] = dense_init(ks[2], (cfg.kv_lora, cfg.n_heads * cfg.nope_dim), dtype=dt)
+        p["v_b"] = dense_init(ks[5], (cfg.kv_lora, cfg.n_heads * cfg.v_head_dim), dtype=dt)
+    if cfg.moe:
+        e = cfg.n_experts
+        p["router"] = dense_init(ks[6], (d, e), scale=d ** -0.5, dtype=jnp.float32)
+        p["w_gate"] = dense_init(ks[7], (e, d, cfg.d_ff), dtype=dt)
+        p["w_up"] = dense_init(ks[8], (e, d, cfg.d_ff), dtype=dt)
+        p["w_down"] = dense_init(ks[9], (e, cfg.d_ff, d), dtype=dt)
+    else:
+        p["w_gate"] = dense_init(ks[7], (d, cfg.d_ff), dtype=dt)
+        p["w_up"] = dense_init(ks[8], (d, cfg.d_ff), dtype=dt)
+        p["w_down"] = dense_init(ks[9], (cfg.d_ff, d), dtype=dt)
+    return p
+
+
+def _vdim(cfg: TransformerConfig) -> int:
+    return cfg.v_head_dim if cfg.attn == "mla" else cfg.d_head
+
+
+def init_transformer(cfg: TransformerConfig, key) -> Params:
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: _layer_init(cfg, k))(layer_keys)
+    return {
+        "embed": dense_init(k_emb, (cfg.vocab_padded, cfg.d_model), scale=1.0,
+                            dtype=cfg.param_dtype),
+        "layers": layers,
+        "ln_f": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "lm_head": dense_init(k_head, (cfg.d_model, cfg.vocab_padded),
+                              dtype=cfg.param_dtype),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# attention
+# --------------------------------------------------------------------------- #
+
+
+def _gqa_qkv(p: Params, cfg: TransformerConfig, h: jax.Array, pos: jax.Array):
+    b, t, _ = h.shape
+    q = (h @ p["q_proj"]).reshape(b, t, cfg.n_heads, cfg.d_head)
+    k = (h @ p["k_proj"]).reshape(b, t, cfg.n_kv_heads, cfg.d_head)
+    v = (h @ p["v_proj"]).reshape(b, t, cfg.n_kv_heads, cfg.d_head)
+    q = apply_rope(q.transpose(0, 2, 1, 3), pos[:, None, :])
+    k = apply_rope(k.transpose(0, 2, 1, 3), pos[:, None, :])
+    return q, k, v.transpose(0, 2, 1, 3)
+
+
+def _mla_q(p: Params, cfg: TransformerConfig, h: jax.Array, pos: jax.Array):
+    b, t, _ = h.shape
+    qd = cfg.nope_dim + cfg.rope_dim
+    if cfg.q_lora:
+        qa = rms_norm(h @ p["q_a"], p["q_a_norm"])
+        q = (qa @ p["q_b"]).reshape(b, t, cfg.n_heads, qd)
+    else:
+        q = (h @ p["q_proj"]).reshape(b, t, cfg.n_heads, qd)
+    q = q.transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :cfg.nope_dim], q[..., cfg.nope_dim:]
+    q_rope = apply_rope(q_rope, pos[:, None, :])
+    return q_nope, q_rope
+
+
+def _mla_latent(p: Params, cfg: TransformerConfig, h: jax.Array, pos: jax.Array):
+    """Compressed latent c_kv [B,T,kv_lora] + shared rope key [B,T,rope]."""
+    kv = h @ p["kv_a"]
+    c_kv = rms_norm(kv[..., :cfg.kv_lora], p["kv_a_norm"])
+    k_rope = apply_rope(kv[..., None, cfg.kv_lora:].transpose(0, 2, 1, 3),
+                        pos[:, None, :])[:, 0]  # [B,T,rope]
+    return c_kv, k_rope
+
+
+def _mla_attend(p: Params, cfg: TransformerConfig, q_nope, q_rope,
+                c_kv, k_rope, causal: bool) -> jax.Array:
+    """Matrix-absorbed MLA attention over the latent cache.
+
+    scores = q_nope·(c_kv W_kb)^T + q_rope·k_rope^T computed WITHOUT
+    expanding per-head keys: absorb W_kb into q (q_eff = q_nope @ W_kb^T per
+    head), attend over the kv_lora-dim latent, then expand values through
+    W_vb only at the end (DeepSeek-V2 style serving trick).
+    """
+    b, nh, t, _ = q_nope.shape
+    w_kb = p["k_b"].reshape(cfg.kv_lora, nh, cfg.nope_dim)
+    q_eff = jnp.einsum("bhtd,lhd->bhtl", q_nope, w_kb)        # [B,H,T,kv_lora]
+    q_full = jnp.concatenate([q_eff, q_rope], axis=-1)
+    k_full = jnp.concatenate([c_kv, k_rope], axis=-1)          # [B,S,l+r]
+    k_full = k_full[:, None].astype(q_full.dtype)              # kv head = 1
+    ctx = ops.attention(q_full, k_full, c_kv[:, None].astype(q_full.dtype),
+                        causal=causal)                         # [B,H,T,kv_lora]
+    w_vb = p["v_b"].reshape(cfg.kv_lora, nh, cfg.v_head_dim)
+    return jnp.einsum("bhtl,lhv->bhtv", ctx, w_vb)
+
+
+# --------------------------------------------------------------------------- #
+# FFN / MoE
+# --------------------------------------------------------------------------- #
+
+
+def _dense_ffn(p: Params, h: jax.Array) -> jax.Array:
+    return (jax.nn.silu(h @ p["w_gate"]) * (h @ p["w_up"])) @ p["w_down"]
+
+
+def _moe_ffn(p: Params, cfg: TransformerConfig, h: jax.Array) -> jax.Array:
+    """Top-k MoE with capacity-bucket dispatch (GShard-style, EP-shardable).
+
+    Tokens are scattered into a [E, C, D] buffer (C = capacity) so the
+    expert matmuls are dense batched GEMMs; with experts sharded over the
+    'model' axis GSPMD turns the scatter/gather into all-to-alls.
+    """
+    b, t, d = h.shape
+    e, k = cfg.n_experts, cfg.top_k
+    # per-batch-row capacity buckets: every scatter/gather below carries a
+    # leading batch dim, so under batch sharding GSPMD keeps them LOCAL and
+    # only the expert einsums move data (EXPERIMENTS.md §Perf H1').
+    cap = max(1, int(t * k / e * cfg.capacity_factor))
+
+    logits = h.astype(jnp.float32) @ p["router"]               # [B,t,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                        # [B,t,k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    flat = idx.reshape(b, t * k)                               # expert ids
+    oh = jax.nn.one_hot(flat, e, dtype=jnp.int32)              # [B,t*k,E]
+    rank_all = jnp.cumsum(oh, axis=1) - 1
+    rank = jnp.take_along_axis(rank_all, flat[..., None],
+                               axis=2)[..., 0]                 # [B,t*k]
+    keep = rank < cap
+    slot = jnp.where(keep, rank, 0)
+    rows = jnp.arange(b)[:, None]
+    tok_in_row = jnp.arange(t * k) // k                        # [t*k]
+
+    buf = jnp.zeros((b, e, cap, d), h.dtype)
+    upd = jnp.where(keep[..., None], h[:, tok_in_row, :], 0)
+    buf = buf.at[rows, flat, slot].add(upd)                    # batched scatter
+
+    y = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["w_gate"]))
+    y = y * jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    y = jnp.einsum("becf,efd->becd", y, p["w_down"])
+
+    out = y[rows, flat, slot]                                  # batched gather
+    out = jnp.where(keep[..., None], out, 0)
+    out = out.reshape(b, t, k, d) * gate[..., None].astype(out.dtype)
+    # aux load-balance loss (Switch): returned via side channel if needed
+    return out.sum(axis=2)
+
+
+# --------------------------------------------------------------------------- #
+# forward / decode
+# --------------------------------------------------------------------------- #
+
+
+def _layer_fn(cfg: TransformerConfig, h: jax.Array, pos: jax.Array,
+              p: Params) -> jax.Array:
+    if cfg.seq_shard:
+        # Megatron-SP: the inter-layer residual is the dominant live
+        # activation under scan+remat; shard its seq dim over 'model' so the
+        # per-device footprint is B*T*D/(dp*tp), not B*T*D/dp (§Perf H3).
+        h = annotate.constrain(h, annotate.data_axes(), "model", None)
+    x = rms_norm(h, p["ln_attn"])
+    b, t, _ = h.shape
+    if cfg.attn == "gqa":
+        q, k, v = _gqa_qkv(p, cfg, x, pos)
+        ctx = ops.attention(q, k, v, causal=True)
+    else:
+        q_nope, q_rope = _mla_q(p, cfg, x, pos)
+        c_kv, k_rope = _mla_latent(p, cfg, x, pos)
+        ctx = _mla_attend(p, cfg, q_nope, q_rope, c_kv, k_rope, causal=True)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, t, -1)
+    h = h + ctx @ p["o_proj"]
+    x = rms_norm(h, p["ln_ffn"])
+    ffn = _moe_ffn(p, cfg, x) if cfg.moe else _dense_ffn(p, x)
+    return h + ffn
+
+
+def forward(params: Params, tokens: jax.Array, cfg: TransformerConfig,
+            ) -> jax.Array:
+    """tokens [B, T] -> logits [B, T, V]; scan over stacked layers."""
+    h = params["embed"][tokens].astype(cfg.compute_dtype)
+    pos = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+
+    def body(h, lp):
+        return _layer_fn(cfg, h, pos, lp), None
+
+    if cfg.remat:
+        import os
+        policy_name = os.environ.get("REPRO_REMAT_POLICY", cfg.remat_policy)
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if policy_name == "dots" else None)
+        body = jax.checkpoint(body, prevent_cse=False, policy=policy)
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    h = rms_norm(h, params["ln_f"])
+    logits = h @ params["lm_head"].astype(cfg.compute_dtype)
+    return _mask_pad_vocab(logits, cfg)
+
+
+def _mask_pad_vocab(logits: jax.Array, cfg: TransformerConfig) -> jax.Array:
+    if cfg.vocab_padded == cfg.vocab:
+        return logits
+    pad = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+    return jnp.where(pad, jnp.asarray(-1e30, logits.dtype), logits)
+
+
+def loss_fn(params: Params, tokens: jax.Array, labels: jax.Array,
+            cfg: TransformerConfig) -> jax.Array:
+    logits = forward(params, tokens, cfg)
+    return cross_entropy(logits, labels)
+
+
+# ------------------------------------------------------------------ serving
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int) -> Params:
+    if cfg.attn == "mla":
+        return {
+            "c_kv": jnp.zeros((cfg.n_layers, batch, max_len, cfg.kv_lora),
+                              cfg.compute_dtype),
+            "k_rope": jnp.zeros((cfg.n_layers, batch, max_len, cfg.rope_dim),
+                                cfg.compute_dtype),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, max_len,
+                        cfg.d_head), cfg.compute_dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, max_len,
+                        cfg.d_head), cfg.compute_dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params: Params, cache: Params, tokens: jax.Array,
+                cfg: TransformerConfig) -> Tuple[jax.Array, Params]:
+    """One-token decode: tokens [B] -> logits [B, V], updated cache.
+
+    Attention is O(cache_len) per token (linear, never quadratic); masking
+    handles the ragged live length.
+    """
+    b = tokens.shape[0]
+    t_now = cache["len"]
+    h = params["embed"][tokens][:, None].astype(cfg.compute_dtype)  # [B,1,D]
+    pos = jnp.full((b, 1), t_now, jnp.int32)
+    max_len = (cache["c_kv"].shape[2] if cfg.attn == "mla"
+               else cache["k"].shape[3])
+    span = jnp.arange(max_len)
+    live = (span <= t_now)[None, None, None, :]                 # [1,1,1,S]
+    bias = jnp.where(live, 0.0, -1e30).astype(jnp.float32)
+
+    new_cache = dict(cache)
+
+    def layer(i, h):
+        p = jax.tree.map(lambda a: a[i], params["layers"])
+        x = rms_norm(h, p["ln_attn"])
+        if cfg.attn == "gqa":
+            q, k1, v1 = _gqa_qkv(p, cfg, x, pos)
+            k_all = jax.lax.dynamic_update_index_in_dim(
+                cache["k"][i], k1[:, :, 0], t_now, 2)
+            v_all = jax.lax.dynamic_update_index_in_dim(
+                cache["v"][i], v1[:, :, 0], t_now, 2)
+            ctx = ops.attention(q, k_all, v_all, causal=False, bias=bias)
+            upd = (k_all, v_all)
+        else:
+            q_nope, q_rope = _mla_q(p, cfg, x, pos)
+            c1, r1 = _mla_latent(p, cfg, x, pos)
+            c_all = jax.lax.dynamic_update_index_in_dim(
+                cache["c_kv"][i], c1[:, 0], t_now, 1)
+            r_all = jax.lax.dynamic_update_index_in_dim(
+                cache["k_rope"][i], r1[:, 0], t_now, 1)
+            w_kb = p["k_b"].reshape(cfg.kv_lora, cfg.n_heads, cfg.nope_dim)
+            q_eff = jnp.einsum("bhtd,lhd->bhtl", q_nope, w_kb)
+            q_full = jnp.concatenate([q_eff, q_rope], axis=-1)
+            k_full = jnp.concatenate([c_all, r_all], axis=-1)[:, None]
+            ctx = ops.attention(q_full, k_full.astype(q_full.dtype),
+                                c_all[:, None].astype(q_full.dtype),
+                                causal=False, bias=bias)
+            w_vb = p["v_b"].reshape(cfg.kv_lora, cfg.n_heads, cfg.v_head_dim)
+            ctx = jnp.einsum("bhtl,lhv->bhtv", ctx, w_vb)
+            upd = (c_all, r_all)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(b, 1, -1)
+        h = h + ctx @ p["o_proj"]
+        x = rms_norm(h, p["ln_ffn"])
+        ffn = _moe_ffn(p, cfg, x) if cfg.moe else _dense_ffn(p, x)
+        return h + ffn, upd
+
+    # scan over layers, threading per-layer cache updates
+    def body(h, xs):
+        i = xs
+        h, upd = layer(i, h)
+        return h, upd
+
+    h2, upds = jax.lax.scan(body, h, jnp.arange(cfg.n_layers))
+    if cfg.attn == "mla":
+        new_cache["c_kv"], new_cache["k_rope"] = upds
+    else:
+        new_cache["k"], new_cache["v"] = upds
+    new_cache["len"] = t_now + 1
+    h2 = rms_norm(h2, params["ln_f"])
+    logits = (h2 @ params["lm_head"].astype(cfg.compute_dtype))[:, 0]
+    return _mask_pad_vocab(logits, cfg), new_cache

@@ -1,0 +1,59 @@
+"""Train-step factory: loss -> grads -> AdamW, with microbatch accumulation.
+
+``make_train_step`` builds the pjit-able pure function used by both the real
+trainer (launch/train.py) and the multi-pod dry-run.  Compute/communication
+overlap and FSDP reduce-scatter placement are delegated to GSPMD via the
+in/out shardings chosen in repro.dist.sharding; microbatching bounds
+activation memory on the giant configs.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: adamw.AdamWConfig,
+                    n_microbatches: int = 1):
+    """loss_fn(params, *batch_parts) -> scalar.
+
+    Batch parts must have a leading batch dim divisible by n_microbatches.
+    """
+
+    def train_step(params, opt_state, *batch):
+        if n_microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, *batch)
+        else:
+            def micro(i):
+                parts = tuple(
+                    x.reshape(n_microbatches, -1, *x.shape[1:])[i] for x in batch)
+                return jax.value_and_grad(loss_fn)(params, *parts)
+
+            def body(carry, i):
+                acc_loss, acc_g = carry
+                l, g = micro(i)
+                return (acc_loss + l,
+                        jax.tree.map(jnp.add, acc_g, g)), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.float32(0), zero_g),
+                jnp.arange(n_microbatches))
+            loss = loss / n_microbatches
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+        params, opt_state, metrics = adamw.update(grads, opt_state, params,
+                                                  opt_cfg)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(loss_fn: Callable):
+    def eval_step(params, *batch):
+        return loss_fn(params, *batch)
+    return eval_step

@@ -1,0 +1,128 @@
+"""Unit + property tests for the lossless-summary state machine (Tier A)."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.reference.dynamic_summary import DynamicSummary
+from repro.core.summary import encoding_cost, is_superedge, pair_key, t_count
+
+from conftest import ground_truth_edges
+
+
+def test_encoding_cost_matches_rule():
+    # the optimal rule (Sect. 3.1) and the closed-form min agree everywhere
+    for t in range(0, 40):
+        for e in range(0, t + 1):
+            c_plus_mode = e
+            super_mode = 1 + t - e
+            assert encoding_cost(e, t) == (0 if e == 0 else
+                                           min(c_plus_mode, super_mode))
+            if e > 0:
+                assert is_superedge(e, t) == (super_mode < c_plus_mode)
+
+
+def _check_all(s: DynamicSummary, truth, tag=""):
+    mat = s.materialize()
+    assert s.phi == s.phi_recomputed(), tag
+    assert s.phi == mat.phi, tag
+    assert mat.decode_edges() == truth, tag
+    for u in s.n2s:
+        expect = {v for (a, b) in truth for v in (a, b) if u in (a, b)} - {u}
+        assert s.neighbors(u) == expect, tag
+        assert s.deg[u] == len(expect), tag
+
+
+def _random_ops(seed: int, n_nodes: int, n_steps: int):
+    rng = random.Random(seed)
+    s = DynamicSummary()
+    truth = set()
+    for step in range(n_steps):
+        op = rng.random()
+        if op < 0.45 or not truth:
+            u, v = rng.sample(range(n_nodes), 2)
+            e = (min(u, v), max(u, v))
+            if e in truth:
+                continue
+            truth.add(e)
+            s.insert(*e)
+        elif op < 0.65:
+            e = rng.choice(sorted(truth))
+            truth.remove(e)
+            s.delete(*e)
+        else:
+            present = [n for n in range(n_nodes) if n in s.n2s]
+            if not present:
+                continue
+            y = rng.choice(present)
+            t = s.new_sid() if rng.random() < 0.3 else rng.choice(list(s.members))
+            d = s.delta_phi(y, t)
+            phi0 = s.phi
+            s.move(y, t)
+            assert s.phi - phi0 == d, "closed-form delta_phi != applied delta"
+        _check_all(s, truth, f"seed={seed} step={step}")
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_fuzz_insert_delete_move(seed):
+    """Losslessness + phi consistency + Lemma-1 retrieval under random ops."""
+    _random_ops(seed, n_nodes=9, n_steps=50)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 7), st.integers(0, 7)), max_size=40),
+       st.randoms(use_true_random=False))
+def test_property_lossless_stream(pairs, rnd):
+    """Hypothesis: any sound stream + arbitrary moves stays lossless."""
+    s = DynamicSummary()
+    truth = set()
+    for (u, v) in pairs:
+        if u == v:
+            continue
+        e = (min(u, v), max(u, v))
+        if e in truth:
+            truth.remove(e)
+            s.delete(*e)
+        else:
+            truth.add(e)
+            s.insert(*e)
+        if s.n2s and rnd.random() < 0.5:
+            y = rnd.choice(sorted(s.n2s))
+            tgt = rnd.choice(sorted(s.members))
+            s.move(y, tgt)
+    assert s.materialize().decode_edges() == truth
+    assert s.phi == s.materialize().phi == s.phi_recomputed()
+
+
+def test_move_to_fresh_singleton_roundtrip():
+    s = DynamicSummary()
+    s.insert(0, 1)
+    s.insert(1, 2)
+    s.insert(0, 2)
+    sid0 = s.n2s[0]
+    phi0 = s.phi
+    fresh = s.new_sid()
+    s.move(0, fresh)
+    s.move(0, sid0)
+    assert s.phi == phi0
+    assert s.materialize().decode_edges() == {(0, 1), (0, 2), (1, 2)}
+
+
+def test_phi_upper_bound_is_edge_count():
+    """|P|+|C+|+|C-| <= |E| always holds under the optimal encoding."""
+    rng = random.Random(3)
+    s = DynamicSummary()
+    edges = set()
+    for _ in range(120):
+        u, v = rng.sample(range(15), 2)
+        e = (min(u, v), max(u, v))
+        if e not in edges:
+            edges.add(e)
+            s.insert(*e)
+    assert s.phi <= s.num_edges
+
+
+def test_t_count():
+    assert t_count(3, 4, False) == 12
+    assert t_count(4, 4, True) == 6
+    assert pair_key(5, 2) == (2, 5)

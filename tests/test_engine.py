@@ -1,0 +1,133 @@
+"""Tier-B batched engine: hash tables, step invariants, quality band."""
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.engine import BatchedSummarizer, EngineConfig
+from repro.core.engine.hashtable import (ht_add, ht_delete, ht_load,
+                                         ht_lookup, ht_lookup_batch, ht_new,
+                                         ht_rebuild, ht_set)
+from repro.core.reference import MoSSo
+from repro.graph.streams import edges_to_fully_dynamic_stream, sbm_edges
+
+from conftest import ground_truth_edges
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 5),
+                          st.integers(-2, 2)), max_size=60))
+def test_hashtable_matches_dict(ops):
+    ht = ht_new(64)
+    model = {}
+    for (a, b, d) in ops:
+        if d == 0:
+            model.pop((a, b), None)
+            ht = ht_delete(ht, a, b)
+        else:
+            ht, nv = ht_add(ht, a, b, d, remove_if_zero=True)
+            new = model.get((a, b), 0) + d
+            assert int(nv) == new
+            if new == 0:
+                model.pop((a, b), None)
+            else:
+                model[(a, b)] = new
+    for a in range(6):
+        for b in range(6):
+            assert int(ht_lookup(ht, a, b)) == model.get((a, b), 0)
+    ht2 = ht_rebuild(ht)
+    for (a, b), v in model.items():
+        assert int(ht_lookup(ht2, a, b)) == v
+
+
+def test_hashtable_batch_lookup():
+    ht = ht_new(32)
+    for i in range(8):
+        ht = ht_set(ht, i, i * 2, i + 100)
+    k1 = jnp.arange(10, dtype=jnp.int32)
+    got = ht_lookup_batch(ht, k1, k1 * 2, default=-7)
+    expect = [i + 100 for i in range(8)] + [-7, -7]
+    assert list(map(int, got)) == expect
+
+
+@pytest.fixture(scope="module")
+def engine_cfg():
+    return EngineConfig(n_cap=512, m_cap=4096, d_cap=48, sn_cap=32, c=12,
+                        batch=16, escape=0.25)
+
+
+@pytest.fixture(scope="module")
+def engine_run(engine_cfg):
+    edges = sbm_edges(48, 4, 0.6, 0.02, seed=1)
+    stream = edges_to_fully_dynamic_stream(edges, delete_prob=0.2, seed=2)
+    bs = BatchedSummarizer(engine_cfg)
+    bs.run(stream)
+    return bs, stream
+
+
+def test_engine_lossless(engine_run):
+    bs, stream = engine_run
+    out = bs.materialize()        # materialize() itself asserts eab vs edges
+    gt = set()
+    for (u, v, ins) in stream:
+        a, b = bs._ids[u], bs._ids[v]
+        e = (min(a, b), max(a, b))
+        gt.add(e) if ins else gt.discard(e)
+    assert out.decode_edges() == gt
+
+
+def test_engine_phi_consistent(engine_run):
+    bs, _ = engine_run
+    assert bs.phi == bs.phi_recomputed() == bs.materialize().phi
+    assert 0 < bs.compression_ratio() <= 1.0 + 1e-9
+
+
+def test_engine_accepts_moves(engine_run):
+    bs, _ = engine_run
+    st = bs.stats()
+    assert st["accepted"] > 0
+    assert st["trials"] > st["accepted"]
+
+
+def test_engine_quality_close_to_reference(engine_run):
+    """Tier-B compression within a band of the faithful Tier-A MoSSo."""
+    bs, stream = engine_run
+    ref = MoSSo(seed=3, c=12, escape=0.25)
+    ref.run(stream)
+    assert bs.compression_ratio() <= ref.s.compression_ratio() * 1.25 + 0.05
+
+
+def test_engine_phi_never_negative_and_bounded(engine_run):
+    bs, _ = engine_run
+    assert 0 <= bs.phi <= bs.num_edges
+
+
+def test_engine_table_load_headroom(engine_run):
+    bs, _ = engine_run
+    for name in ("adj", "epos", "eab", "snadj", "snpos"):
+        load = float(ht_load(getattr(bs.state, name)))
+        assert load < 0.6, f"{name} over-loaded: {load}"
+
+
+def test_engine_compaction_preserves_state(engine_cfg):
+    """Tombstone compaction is a pure rewrite: phi, edges, outputs equal."""
+    from repro.graph.streams import barabasi_albert_edges
+    edges = barabasi_albert_edges(60, 3, seed=9)
+    stream = edges_to_fully_dynamic_stream(edges, delete_prob=0.4, seed=10)
+    bs = BatchedSummarizer(engine_cfg)
+    bs.run(stream)
+    before = (bs.phi, bs.num_edges, bs.live_edges())
+    pressure0 = bs.table_pressure()
+    bs.maybe_compact(threshold=0.0)     # force-rebuild every table
+    after = (bs.phi, bs.num_edges, bs.live_edges())
+    assert before == after
+    assert bs.phi == bs.phi_recomputed()
+    # compaction never increases occupied-slot pressure
+    for name, p in bs.table_pressure().items():
+        assert p <= pressure0[name] + 1e-9
+    # and the engine keeps working afterwards
+    bs.process([(10_000, 10_001, True)])
+    assert bs.num_edges == before[1] + 1

@@ -1,0 +1,62 @@
+"""End-to-end behaviour tests for the paper's system (integration level)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.reference import MoSSo
+from repro.graph.streams import (copying_model_edges,
+                                 edges_to_fully_dynamic_stream,
+                                 edges_to_insertion_stream)
+
+from conftest import ground_truth_edges
+
+
+def test_anytime_query_during_stream(small_fd_stream):
+    """'Any time' property: neighborhood queries are correct at EVERY
+    prefix of the stream, straight from the summary (Lemma 1)."""
+    algo = MoSSo(seed=0, c=15, escape=0.2)
+    check_at = set(range(0, len(small_fd_stream), 37))
+    live = set()
+    for t, (u, v, ins) in enumerate(small_fd_stream):
+        algo.process(u, v, ins)
+        e = (min(u, v), max(u, v))
+        live.add(e) if ins else live.discard(e)
+        if t in check_at:
+            for q in list(algo.s.n2s)[:10]:
+                expect = {w for (a, b) in live for w in (a, b)
+                          if q in (a, b)} - {q}
+                assert algo.s.neighbors(q) == expect
+
+
+def test_compression_improves_with_structure():
+    """C5 (Fig 7a): higher copying probability -> better compression."""
+    ratios = []
+    for beta in (0.2, 0.9):
+        edges = copying_model_edges(400, 5, beta, seed=5)
+        algo = MoSSo(seed=1, c=30, escape=0.2)
+        algo.run(edges_to_insertion_stream(edges, seed=1))
+        ratios.append(algo.s.compression_ratio())
+    assert ratios[1] < ratios[0], ratios
+
+
+def test_representation_memory_sublinear_vs_edges():
+    """Thm. 4 flavor: |V|+phi stays below |V|+|E| (the raw graph)."""
+    edges = copying_model_edges(500, 6, 0.85, seed=6)
+    algo = MoSSo(seed=2, c=30, escape=0.2)
+    algo.run(edges_to_insertion_stream(edges, seed=2))
+    raw = len(algo.s.n2s) + algo.s.num_edges
+    assert algo.s.representation_size() < raw
+
+
+def test_serve_cli_end_to_end():
+    from repro.launch.serve import serve
+    out = serve("minicpm3-4b", batch=2, prompt_len=4, gen_tokens=6)
+    assert out["tokens"].shape == (2, 6)
+
+
+def test_quickstart_example_runs():
+    import importlib.util
+    import pathlib
+    p = pathlib.Path(__file__).parent.parent / "examples" / "quickstart.py"
+    spec = importlib.util.spec_from_file_location("quickstart", p)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)   # runs main() guard-free body
