@@ -160,3 +160,81 @@ def recsys_cells() -> Tuple[ShapeCell, ...]:
                             candidates=sds((s["n_cand"],), I32))
         cells.append(ShapeCell(name=name, kind=s["kind"], inputs=inputs))
     return tuple(cells)
+
+
+# ----------------------------------------------------- logical sharding rules
+#
+# Declarative logical-axis layout per parameter leaf, resolved to mesh
+# PartitionSpecs by :mod:`repro.dist.sharding`.  A rule maps a leaf NAME (the
+# last string key on its tree path) to one logical axis name per TRAILING
+# dimension; leading dims (the lax.scan [L] layer stack, MoE [E] experts) are
+# padded with None.  Logical names resolve through LOGICAL_TO_MESH, where
+# "__fsdp__" stands for the arch's ``fsdp_axes`` (ZeRO-3-style parameter
+# sharding over the data axes).  Any placement that does not divide the leaf
+# shape on the target mesh is dropped per-dim at resolution time, so the same
+# rules serve the 512-chip production meshes and 8-device host tests.
+
+MESH_AXES = ("pod", "data", "model")
+
+LOGICAL_TO_MESH = {
+    None: None,
+    "batch": ("pod", "data"),
+    "embed": "__fsdp__",
+    "vocab": ("model",),
+    "heads": ("model",),
+    "ffn": ("model",),
+    "expert": ("model",),
+    "hidden": ("model",),
+    "items": ("model",),
+}
+
+LM_LOGICAL_RULES = {
+    # embeddings / unembedding (Megatron vocab-parallel)
+    "embed": ("vocab", "embed"),
+    "lm_head": ("embed", "vocab"),
+    # GQA attention: column-parallel qkv, row-parallel output
+    "q_proj": ("embed", "heads"),
+    "k_proj": ("embed", "heads"),
+    "v_proj": ("embed", "heads"),
+    "o_proj": ("heads", "embed"),
+    # MLA low-rank path: shard only the per-head expansions
+    "q_a": ("embed", None),
+    "q_b": (None, "heads"),
+    "kv_a": ("embed", None),
+    "k_b": (None, "heads"),
+    "v_b": (None, "heads"),
+    # dense FFN: column-parallel up, row-parallel down
+    "w_gate": ("embed", "ffn"),
+    "w_up": ("embed", "ffn"),
+    "w_down": ("ffn", "embed"),
+    "router": (None, None),
+}
+
+# Expert-parallel overrides used when the arch is MoE: the [E] expert dim is
+# sharded over 'model' (GSPMD then renders dispatch as all-to-alls), so the
+# ffn dim must stay unsharded.
+MOE_FFN_LOGICAL_RULES = {
+    "w_gate": ("expert", "embed", None),
+    "w_up": ("expert", "embed", None),
+    "w_down": ("expert", None, "embed"),
+}
+
+GNN_LOGICAL_RULES = {
+    "embed": (None, "hidden"),
+    "grid_embed": (None, "hidden"),
+    "w_self": (None, "hidden"),
+    "w_nbr": (None, "hidden"),
+    "w": (None, "hidden"),          # generic MLP layer weight
+    "head": (None, None),
+    "w_rbf": (None, "hidden"),
+}
+
+RECSYS_LOGICAL_RULES = {
+    "item_emb": ("items", "embed"),
+    "wq": ("embed", "hidden"),
+    "wk": ("embed", "hidden"),
+    "wv": ("embed", "hidden"),
+    "wo": ("hidden", "embed"),
+    "ff1": ("embed", "hidden"),
+    "ff2": ("hidden", "embed"),
+}

@@ -1,6 +1,6 @@
-from repro.core.engine.api import BatchedSummarizer
+from repro.core.engine.api import BatchedSummarizer, ShardedSummarizer
 from repro.core.engine.state import EngineConfig, EngineState, new_state
 from repro.core.engine.trial import make_step, step_fn
 
-__all__ = ["BatchedSummarizer", "EngineConfig", "EngineState", "new_state",
-           "make_step", "step_fn"]
+__all__ = ["BatchedSummarizer", "ShardedSummarizer", "EngineConfig",
+           "EngineState", "new_state", "make_step", "step_fn"]

@@ -1,16 +1,122 @@
-"""Host-side wrapper around the batched engine (Tier B public API)."""
+"""Host-side wrappers around the batched engine (Tier B public API).
+
+Two front-ends share the jitted step:
+
+* :class:`BatchedSummarizer` — one engine on one device.
+* :class:`ShardedSummarizer` — an edge-partitioned fleet of engines laid out
+  over a 1-D device mesh via ``shard_map`` (one ``EngineState`` replica per
+  partition, several replicas per device when ``n_shards`` exceeds the device
+  count), merged into a :class:`ShardedSummaryOutput` on the host.  This is
+  how the MoSSo engine scales past a single device's ``n_cap``.
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Sequence, Set, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from repro.core.engine.state import EngineConfig, EngineState, new_state
-from repro.core.engine.trial import make_step
-from repro.core.summary import SummaryOutput, encoding_cost, is_superedge, pair_key
+from repro.core.engine.trial import make_step, step_fn
+from repro.core.summary import (ShardedSummaryOutput, SummaryOutput,
+                                encoding_cost, is_superedge, pair_key)
 
 Change = Tuple[int, int, bool]
+
+
+# --------------------------------------------------------------------------- #
+# state-level exports (shared by both front-ends; engine-id space)
+# --------------------------------------------------------------------------- #
+
+
+def state_live_edges(state: EngineState) -> Set[Tuple[int, int]]:
+    """Export the live edge set from the slot-position table."""
+    k1 = np.asarray(state.epos.k1)
+    k2 = np.asarray(state.epos.k2)
+    live = k1 >= 0
+    return {(int(a), int(b)) for a, b in zip(k1[live], k2[live]) if a < b}
+
+
+def state_materialize(state: EngineState) -> SummaryOutput:
+    """Derive (G*, P, C+, C-) from counts + membership (optimal encoding)."""
+    n2s = np.asarray(state.n2s)
+    ssize = np.asarray(state.ssize)
+    seen = n2s >= 0
+    members: Dict[int, Set[int]] = {}
+    for u in np.nonzero(seen)[0]:
+        members.setdefault(int(n2s[u]), set()).add(int(u))
+    for sid, mem in members.items():
+        assert len(mem) == ssize[sid], f"ssize drift at sid {sid}"
+
+    k1 = np.asarray(state.eab.k1)
+    k2 = np.asarray(state.eab.k2)
+    val = np.asarray(state.eab.val)
+    live = k1 >= 0
+    edges = state_live_edges(state)
+
+    superedges: Set[Tuple[int, int]] = set()
+    c_plus: Set[Tuple[int, int]] = set()
+    c_minus: Set[Tuple[int, int]] = set()
+    for a, b, e in zip(k1[live], k2[live], val[live]):
+        a, b, e = int(a), int(b), int(e)
+        sa, sb = len(members[a]), len(members[b])
+        t = sa * (sa - 1) // 2 if a == b else sa * sb
+        pair_edges = [pq for pq in _pairs(members[a], members[b], a == b)]
+        actual = [pq for pq in pair_edges if pq in edges]
+        assert len(actual) == e, f"eab drift at pair {(a, b)}: {len(actual)} != {e}"
+        if is_superedge(e, t):
+            superedges.add(pair_key(a, b))
+            c_minus.update(pq for pq in pair_edges if pq not in edges)
+        else:
+            c_plus.update(actual)
+    return SummaryOutput(supernodes=members, superedges=superedges,
+                         c_plus=c_plus, c_minus=c_minus)
+
+
+def state_phi_recomputed(state: EngineState) -> int:
+    k1 = np.asarray(state.eab.k1)
+    k2 = np.asarray(state.eab.k2)
+    val = np.asarray(state.eab.val)
+    ssize = np.asarray(state.ssize)
+    live = k1 >= 0
+    tot = 0
+    for a, b, e in zip(k1[live], k2[live], val[live]):
+        a, b = int(a), int(b)
+        sa, sb = int(ssize[a]), int(ssize[b])
+        t = sa * (sa - 1) // 2 if a == b else sa * sb
+        tot += encoding_cost(int(e), t)
+    return tot
+
+
+def _pairs(ma: Set[int], mb: Set[int], same: bool):
+    if same:
+        mem = sorted(ma)
+        for i, u in enumerate(mem):
+            for v in mem[i + 1:]:
+                yield (u, v)
+    else:
+        for u in sorted(ma):
+            for v in sorted(mb):
+                yield (u, v) if u < v else (v, u)
+
+
+def _relabel_output(out: SummaryOutput, rev: Sequence[object],
+                    sid_offset: int) -> SummaryOutput:
+    """Map a shard's engine-id output back to caller labels, with supernode
+    ids offset into a globally unique range."""
+    return SummaryOutput(
+        supernodes={sid_offset + sid: {rev[u] for u in mem}
+                    for sid, mem in out.supernodes.items()},
+        superedges={(sid_offset + a, sid_offset + b)
+                    for (a, b) in out.superedges},
+        c_plus={pair_key(rev[a], rev[b]) for (a, b) in out.c_plus},
+        c_minus={pair_key(rev[a], rev[b]) for (a, b) in out.c_minus},
+    )
+
+
+# --------------------------------------------------------------------------- #
+# single-engine front-end
+# --------------------------------------------------------------------------- #
 
 
 class BatchedSummarizer:
@@ -104,69 +210,198 @@ class BatchedSummarizer:
 
     # ------------------------------------------------------------ materialize
     def live_edges(self) -> Set[Tuple[int, int]]:
-        """Export the live edge set from the slot-position table."""
-        k1 = np.asarray(self.state.epos.k1)
-        k2 = np.asarray(self.state.epos.k2)
-        live = k1 >= 0
-        return {(int(a), int(b)) for a, b in zip(k1[live], k2[live]) if a < b}
+        return state_live_edges(self.state)
 
     def materialize(self) -> SummaryOutput:
-        """Derive (G*, P, C+, C-) from counts + membership (optimal encoding)."""
-        n2s = np.asarray(self.state.n2s)
-        ssize = np.asarray(self.state.ssize)
-        seen = n2s >= 0
-        members: Dict[int, Set[int]] = {}
-        for u in np.nonzero(seen)[0]:
-            members.setdefault(int(n2s[u]), set()).add(int(u))
-        for sid, mem in members.items():
-            assert len(mem) == ssize[sid], f"ssize drift at sid {sid}"
-
-        k1 = np.asarray(self.state.eab.k1)
-        k2 = np.asarray(self.state.eab.k2)
-        val = np.asarray(self.state.eab.val)
-        live = k1 >= 0
-        edges = self.live_edges()
-
-        superedges: Set[Tuple[int, int]] = set()
-        c_plus: Set[Tuple[int, int]] = set()
-        c_minus: Set[Tuple[int, int]] = set()
-        for a, b, e in zip(k1[live], k2[live], val[live]):
-            a, b, e = int(a), int(b), int(e)
-            sa, sb = len(members[a]), len(members[b])
-            t = sa * (sa - 1) // 2 if a == b else sa * sb
-            pair_edges = [pq for pq in _pairs(members[a], members[b], a == b)]
-            actual = [pq for pq in pair_edges if pq in edges]
-            assert len(actual) == e, f"eab drift at pair {(a, b)}: {len(actual)} != {e}"
-            if is_superedge(e, t):
-                superedges.add(pair_key(a, b))
-                c_minus.update(pq for pq in pair_edges if pq not in edges)
-            else:
-                c_plus.update(actual)
-        return SummaryOutput(supernodes=members, superedges=superedges,
-                             c_plus=c_plus, c_minus=c_minus)
+        return state_materialize(self.state)
 
     def phi_recomputed(self) -> int:
-        k1 = np.asarray(self.state.eab.k1)
-        k2 = np.asarray(self.state.eab.k2)
-        val = np.asarray(self.state.eab.val)
-        ssize = np.asarray(self.state.ssize)
-        live = k1 >= 0
-        tot = 0
-        for a, b, e in zip(k1[live], k2[live], val[live]):
-            a, b = int(a), int(b)
-            sa, sb = int(ssize[a]), int(ssize[b])
-            t = sa * (sa - 1) // 2 if a == b else sa * sb
-            tot += encoding_cost(int(e), t)
-        return tot
+        return state_phi_recomputed(self.state)
 
 
-def _pairs(ma: Set[int], mb: Set[int], same: bool):
-    if same:
-        mem = sorted(ma)
-        for i, u in enumerate(mem):
-            for v in mem[i + 1:]:
-                yield (u, v)
-    else:
-        for u in sorted(ma):
-            for v in sorted(mb):
-                yield (u, v) if u < v else (v, u)
+# --------------------------------------------------------------------------- #
+# sharded front-end
+# --------------------------------------------------------------------------- #
+
+
+def _make_sharded_step(cfg: EngineConfig, mesh):
+    """jit(shard_map) over a stacked [n_shards, ...] state tree.
+
+    Each device owns ``n_shards / n_devices`` independent engine replicas;
+    ``lax.map`` over the local leading axis keeps the engine's control flow
+    (cond/fori) intact instead of paying vmap's both-branches cost.
+    """
+    import jax
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axis = mesh.axis_names[0]
+    state_sds = jax.eval_shape(lambda: new_state(cfg))
+    st_specs = jax.tree.map(lambda _: P(axis), state_sds)
+
+    def local(st, u, v, ins):
+        return jax.lax.map(
+            lambda a: step_fn(a[0], a[1], a[2], a[3], cfg), (st, u, v, ins))
+
+    return jax.jit(shard_map(
+        local, mesh=mesh,
+        in_specs=(st_specs, P(axis), P(axis), P(axis)),
+        out_specs=st_specs, check_rep=False))
+
+
+class ShardedSummarizer:
+    """Edge-partitioned summarization across mesh devices.
+
+    Every stream change is routed to the shard owning its canonical pair
+    (``min(gid(u), gid(v)) % n_shards``), so each engine replica sees a
+    deterministic, disjoint edge partition and summarizes it losslessly on
+    its own ``n_cap``-bounded id space.  Aggregate capacity therefore grows
+    linearly with the shard count.  The merged output is the union-of-parts
+    encoding (:class:`ShardedSummaryOutput`); ``phi`` is the sum of shard
+    phis since per-pair encodings never span shards.
+
+    Unlike :class:`BatchedSummarizer` (whose outputs stay in engine-id
+    space), ``live_edges``/``materialize`` report CALLER labels, so labels
+    must be mutually orderable (ints, strings, ...) for the canonical pair
+    keys; streaming itself accepts any hashable label.
+    """
+
+    def __init__(self, cfg: EngineConfig | None = None, *,
+                 mesh=None, n_shards: Optional[int] = None,
+                 **overrides) -> None:
+        import jax
+        import jax.numpy as jnp
+
+        if cfg is None:
+            cfg = EngineConfig(**overrides)
+        elif overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        self.cfg = cfg
+        if mesh is None:
+            from repro.launch.mesh import make_engine_mesh
+            mesh = make_engine_mesh()
+        self.mesh = mesh
+        n_dev = int(mesh.devices.size)
+        self.n_shards = n_dev if n_shards is None else int(n_shards)
+        if self.n_shards % n_dev != 0:
+            raise ValueError(
+                f"n_shards={self.n_shards} must be a multiple of the mesh "
+                f"device count {n_dev}")
+        self._step = _make_sharded_step(cfg, mesh)
+
+        state1 = new_state(cfg)
+        n = self.n_shards
+        stacked = jax.tree.map(
+            lambda l: jnp.broadcast_to(l[None], (n,) + l.shape), state1)
+        # decorrelate the per-shard trial PRNG streams
+        stacked = stacked._replace(
+            step_no=jnp.uint32(cfg.seed)
+            + jnp.arange(n, dtype=jnp.uint32) * jnp.uint32(2654435761))
+        self.state = stacked
+
+        self._ids: List[Dict[object, int]] = [dict() for _ in range(n)]
+        self._rev: List[List[object]] = [[] for _ in range(n)]
+        self._gids: Dict[object, int] = {}
+        self._host_cache: Optional[List[EngineState]] = None
+
+    # ------------------------------------------------------------------ ids
+    def _gid(self, label: object) -> int:
+        g = self._gids.get(label)
+        if g is None:
+            g = len(self._gids)
+            self._gids[label] = g
+        return g
+
+    def shard_of(self, u: object, v: object) -> int:
+        """Deterministic owner shard of edge {u, v} (stable across the run)."""
+        return min(self._gid(u), self._gid(v)) % self.n_shards
+
+    def _nid(self, shard: int, label: object) -> int:
+        ids = self._ids[shard]
+        i = ids.get(label)
+        if i is None:
+            i = len(self._rev[shard])
+            assert i < self.cfg.n_cap, f"shard {shard} node capacity exceeded"
+            ids[label] = i
+            self._rev[shard].append(label)
+        return i
+
+    # --------------------------------------------------------------- stream
+    def process(self, changes: Sequence[Change]) -> None:
+        n, b = self.n_shards, self.cfg.batch
+        buckets: List[List[Tuple[int, int, bool]]] = [[] for _ in range(n)]
+        for (u, v, ins) in changes:
+            s = self.shard_of(u, v)
+            buckets[s].append((self._nid(s, u), self._nid(s, v), ins))
+        rounds = (max((len(q) for q in buckets), default=0) + b - 1) // b
+        for r in range(rounds):
+            u = np.full((n, b), -1, np.int32)
+            v = np.full((n, b), -1, np.int32)
+            ins = np.zeros((n, b), bool)
+            for s in range(n):
+                for j, (a, c, f) in enumerate(buckets[s][r * b:(r + 1) * b]):
+                    u[s, j], v[s, j], ins[s, j] = a, c, f
+            self.state = self._step(self.state, u, v, ins)
+        self._host_cache = None
+
+    def run(self, stream: Iterable[Change]) -> "ShardedSummarizer":
+        self.process(list(stream))
+        return self
+
+    # ---------------------------------------------------------------- stats
+    def host_states(self) -> List[EngineState]:
+        """All shard states as host arrays: one device transfer, memoized
+        until the next ``process`` call mutates the device state."""
+        if self._host_cache is None:
+            import jax
+            stacked = jax.device_get(self.state)
+            self._host_cache = [jax.tree.map(lambda x: x[s], stacked)
+                                for s in range(self.n_shards)]
+        return self._host_cache
+
+    def shard_state(self, shard: int) -> EngineState:
+        return self.host_states()[shard]
+
+    def shard_phis(self) -> List[int]:
+        return [int(x) for x in np.asarray(self.state.phi)]
+
+    @property
+    def phi(self) -> int:
+        return sum(self.shard_phis())
+
+    @property
+    def num_edges(self) -> int:
+        return int(np.asarray(self.state.num_edges).sum())
+
+    def compression_ratio(self) -> float:
+        e = self.num_edges
+        return float(self.phi) / e if e else 0.0
+
+    def stats(self) -> dict:
+        s = self.state
+        tot = lambda x: int(np.asarray(x).sum())  # noqa: E731
+        return dict(phi=self.phi, num_edges=tot(s.num_edges),
+                    trials=tot(s.n_trials), accepted=tot(s.n_accept),
+                    skipped=tot(s.n_skipped), n_shards=self.n_shards)
+
+    # ------------------------------------------------------------ materialize
+    def live_edges(self) -> Set[Tuple[object, object]]:
+        """Union of per-shard live edges, mapped back to caller labels."""
+        out: Set[Tuple[object, object]] = set()
+        for s, st in enumerate(self.host_states()):
+            rev = self._rev[s]
+            for (a, b) in state_live_edges(st):
+                out.add(pair_key(rev[a], rev[b]))
+        return out
+
+    def materialize(self) -> ShardedSummaryOutput:
+        """Merged host-side output: per-shard lossless summaries in label
+        space, supernode ids offset into disjoint per-shard ranges."""
+        shards = []
+        for s, st in enumerate(self.host_states()):
+            out = state_materialize(st)
+            shards.append(_relabel_output(out, self._rev[s], s * self.cfg.n_cap))
+        return ShardedSummaryOutput(shards=shards)
+
+    def phi_recomputed(self) -> int:
+        return sum(state_phi_recomputed(st) for st in self.host_states())

@@ -88,6 +88,40 @@ class SummaryOutput:
 
 
 @dataclass
+class ShardedSummaryOutput:
+    """Union-of-parts output of an edge-partitioned summarization run.
+
+    Each shard is an independent lossless summary of its edge partition, so
+    the global edge set is the UNION of per-shard decodes.  C- stays scoped
+    to its shard: a node may belong to supernodes in several shards, and a
+    shard's correction must never subtract an edge owned by another shard,
+    which is why the parts are kept rather than flattened into one
+    :class:`SummaryOutput`.
+    """
+
+    shards: List[SummaryOutput]
+
+    @property
+    def phi(self) -> int:
+        """Global objective: per-pair encodings are disjoint across shards."""
+        return sum(s.phi for s in self.shards)
+
+    def decode_edges(self) -> Set[Pair]:
+        edges: Set[Pair] = set()
+        for s in self.shards:
+            edges |= s.decode_edges()
+        return edges
+
+    def node_count(self) -> int:
+        """Distinct nodes across shards (a node may appear in several)."""
+        nodes: Set[int] = set()
+        for s in self.shards:
+            for mem in s.supernodes.values():
+                nodes |= mem
+        return len(nodes)
+
+
+@dataclass
 class StreamStats:
     """Per-run accounting used by benchmarks and EXPERIMENTS.md."""
 

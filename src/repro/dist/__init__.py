@@ -1,0 +1,12 @@
+"""Distribution layer: logical-axis annotation, sharding rules, collectives.
+
+``annotate`` must import before ``sharding``: resolving the rule tables pulls
+in :mod:`repro.configs`, whose arch modules import the model code, which in
+turn imports ``repro.dist.annotate`` — keeping annotate first makes that
+cycle re-entrant-safe.
+"""
+from repro.dist import annotate          # noqa: F401  (import order matters)
+from repro.dist import collectives       # noqa: F401
+from repro.dist import sharding          # noqa: F401
+
+__all__ = ["annotate", "collectives", "sharding"]

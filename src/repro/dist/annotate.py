@@ -1,0 +1,79 @@
+"""Logical-axis annotation helpers for model code.
+
+Model forward passes declare *where an activation wants to live* without
+naming a concrete mesh::
+
+    h = annotate.constrain(h, annotate.data_axes(), "model", None)
+
+The mesh is installed by the launcher (``set_mesh``); with no mesh installed
+every helper is an exact no-op, so single-device tests, CPU smoke runs and
+``jax.eval_shape`` dry-runs never touch device state.  Each per-dim entry may
+be ``None`` (replicated), a mesh axis name, or a tuple of axis names; entries
+that reference axes absent from the installed mesh, or that do not divide the
+dimension, are dropped rather than erroring — the constraint is a placement
+hint, not a shape contract.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisSpec = Union[None, str, Tuple[str, ...]]
+
+_MESH: Optional[Mesh] = None
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    """Install the mesh consumed by subsequent ``constrain`` calls."""
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+def clear_mesh() -> None:
+    set_mesh(None)
+
+
+def data_axes() -> Tuple[str, ...]:
+    """Mesh axes carrying data parallelism (empty without a mesh)."""
+    if _MESH is None:
+        return ()
+    from repro.dist.sharding import batch_axes
+    return batch_axes(_MESH)
+
+
+def model_axes() -> Tuple[str, ...]:
+    if _MESH is None:
+        return ()
+    return tuple(a for a in ("model",) if a in _MESH.axis_names)
+
+
+def constrain(x: jax.Array, *axes: AxisSpec) -> jax.Array:
+    """``with_sharding_constraint`` against the installed mesh (or identity).
+
+    One ``AxisSpec`` per array dim; invalid placements degrade to replicated
+    per-dim (via the shared ``sharding.guard_spec``) instead of failing, so
+    model code stays mesh-shape agnostic.
+    """
+    if _MESH is None:
+        return x
+    if len(axes) != x.ndim:
+        raise ValueError(
+            f"constrain got {len(axes)} axis specs for rank-{x.ndim} array")
+    from repro.dist.sharding import guard_spec
+    spec = guard_spec(P(*axes), x.shape, _MESH)
+    if all(e is None for e in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """Shard the leading (batch) dim over the data axes; identity otherwise."""
+    if _MESH is None or x.ndim == 0:
+        return x
+    return constrain(x, data_axes(), *([None] * (x.ndim - 1)))

@@ -1,0 +1,45 @@
+"""Compressed cross-shard collectives.
+
+Gradient/statistic all-reduces dominate the interconnect budget at pod
+scale.  ``compressed_psum`` applies symmetric int8 quantization to the local
+contribution before the reduction: the error model of a quantized all-reduce
+(at most half a quantization step per shard, so the relative error of the
+sum stays small for well-scaled inputs).  NOTE on wire size: the psum itself
+still runs on the dequantized f32 tensor — XLA offers no int8 all-reduce —
+so this establishes the ACCURACY contract of compression; actual 4x wire
+savings need a backend collective that moves the (q, scale) payload.
+"""
+from __future__ import annotations
+
+from typing import Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+AxisName = Union[str, Tuple[str, ...]]
+
+
+def int8_quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization: returns (q, scale).
+
+    ``dequantize(q, scale)`` is within ``scale / 2`` of ``x`` elementwise.
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax / 127.0, jnp.float32(1e-12))
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def int8_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x: jax.Array, axis_name: AxisName) -> jax.Array:
+    """psum over ``axis_name`` with int8-compressed local contributions."""
+    q, scale = int8_quantize(x)
+    return jax.lax.psum(int8_dequantize(q, scale), axis_name)
+
+
+def compressed_pmean(x: jax.Array, axis_name: AxisName) -> jax.Array:
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    return compressed_psum(x, axis_name) / n

@@ -30,5 +30,20 @@ def make_host_mesh():
     return jax.make_mesh((n,), ("data",))
 
 
+def make_engine_mesh(n_devices: int | None = None):
+    """1-D ('shard',) mesh for edge-partitioned summarization engines.
+
+    Uses the first ``n_devices`` local devices (all of them by default); the
+    ShardedSummarizer lays one or more engine replicas on each.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else n_devices
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"need 1..{len(devs)} devices, got {n}")
+    return Mesh(np.asarray(devs[:n]), ("shard",))
+
+
 def chips(mesh) -> int:
     return mesh.devices.size

@@ -40,14 +40,27 @@ def rope_freqs(d: int, max_pos: int, base: float = 10000.0) -> jax.Array:
 
 
 def apply_rope(x: jax.Array, pos: jax.Array, base: float = 10000.0) -> jax.Array:
-    """x: [..., T, D] with D even; pos: broadcastable int [..., T]."""
+    """x: [..., T, D] with D even; pos: broadcastable int [..., T].
+
+    Roll formulation: ``x * cos + sign * roll(x, D/2) * sin`` with full-width
+    cos/sin tables.  Same rotation as the split-halves form element-for-
+    element (identical up to ~1 ulp: ``base**(-2j/d)`` vs ``1/base**(2j/d)``
+    round differently under XLA pow), but expressed with NO concatenate/slice
+    over the feature dim:
+    concatenating slices of a tensor-parallel-sharded operand miscompiles in
+    the SPMD partitioner on the CPU backend (observed on jax 0.4.37 under
+    ``xla_force_host_platform_device_count``; exercised by tests/test_dist.py
+    whenever the packed kv projection is sharded finer than a head).
+    """
     d = x.shape[-1]
-    inv = 1.0 / (base ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
-    ang = pos.astype(jnp.float32)[..., None] * inv          # [..., T, D/2]
-    cos, sin = jnp.cos(ang), jnp.sin(ang)
-    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
-    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
-    return out.astype(x.dtype)
+    half = d // 2
+    idx = jnp.arange(d, dtype=jnp.float32) % half
+    inv = base ** (-2.0 * idx / d)
+    ang = pos.astype(jnp.float32)[..., None] * inv          # [..., T, D]
+    sign = jnp.where(jnp.arange(d) < half, -1.0, 1.0)
+    xf = x.astype(jnp.float32)
+    rot = jnp.roll(xf, half, axis=-1)
+    return (xf * jnp.cos(ang) + sign * rot * jnp.sin(ang)).astype(x.dtype)
 
 
 def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,

@@ -1,0 +1,4 @@
+"""Test-support utilities shipped with the library (no external deps)."""
+from repro.testing import proptest  # noqa: F401
+
+__all__ = ["proptest"]

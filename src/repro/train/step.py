@@ -13,6 +13,7 @@ from typing import Any, Callable, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.dist import annotate
 from repro.optim import adamw
 
 
@@ -24,6 +25,9 @@ def make_train_step(loss_fn: Callable, opt_cfg: adamw.AdamWConfig,
     """
 
     def train_step(params, opt_state, *batch):
+        # pin the batch to the data axes when a mesh is installed (no-op
+        # otherwise) so GSPMD never gathers inputs before the microbatch split
+        batch = tuple(annotate.constrain_batch(x) for x in batch)
         if n_microbatches == 1:
             loss, grads = jax.value_and_grad(loss_fn)(params, *batch)
         else:

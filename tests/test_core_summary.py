@@ -2,7 +2,11 @@
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # container has no hypothesis; deterministic shim
+    from repro.testing.proptest import given, settings, strategies as st
 
 from repro.core.reference.dynamic_summary import DynamicSummary
 from repro.core.summary import encoding_cost, is_superedge, pair_key, t_count
@@ -120,6 +124,60 @@ def test_phi_upper_bound_is_edge_count():
             edges.add(e)
             s.insert(*e)
     assert s.phi <= s.num_edges
+
+
+def _random_state(rng: random.Random, n_nodes: int, n_steps: int,
+                  ) -> DynamicSummary:
+    """A randomized DynamicSummary built from sound inserts/deletes/moves."""
+    s = DynamicSummary()
+    live = set()
+    for _ in range(n_steps):
+        op = rng.random()
+        if op < 0.55 or not live:
+            u, v = rng.sample(range(n_nodes), 2)
+            e = (min(u, v), max(u, v))
+            if e not in live:
+                live.add(e)
+                s.insert(*e)
+        elif op < 0.75:
+            e = rng.choice(sorted(live))
+            live.remove(e)
+            s.delete(*e)
+        elif s.n2s:
+            y = rng.choice(sorted(s.n2s))
+            t = s.new_sid() if rng.random() < 0.3 else rng.choice(sorted(s.members))
+            s.move(y, t)
+    return s
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_delta_phi_faithful_on_random_states(seed):
+    """The docstring claim of dynamic_summary.py: delta_phi(y, target) equals
+    the measured phi difference of actually applying move(y, target) —
+    checked on randomized states, for existing, fresh, and own-sid targets,
+    with and without a precomputed neighbor histogram."""
+    rng = random.Random(1000 + seed)
+    s = _random_state(rng, n_nodes=10, n_steps=40)
+    if not s.n2s:
+        return
+    for trial in range(12):
+        y = rng.choice(sorted(s.n2s))
+        r = rng.random()
+        if r < 0.25:
+            target = s.new_sid()             # escape to a fresh singleton
+        elif r < 0.35:
+            target = s.n2s[y]                # no-op move
+        else:
+            target = rng.choice(sorted(s.members))
+        d = s.delta_phi(y, target)
+        d_hist = s.delta_phi(y, target, h=s.neighbor_hist(y))
+        assert d == d_hist, "histogram-reusing path diverged"
+        phi0 = s.phi
+        s.move(y, target)
+        assert s.phi - phi0 == d, (
+            f"seed={seed} trial={trial}: closed-form {d} != "
+            f"applied {s.phi - phi0}")
+        assert s.phi == s.phi_recomputed()
 
 
 def test_t_count():

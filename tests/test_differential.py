@@ -1,0 +1,100 @@
+"""Differential engine-vs-reference tests.
+
+The same synthetic FD stream (graph/streams.py) drives the Tier-A
+DynamicSummary and the Tier-B BatchedSummarizer side by side; after every
+engine batch both must (a) satisfy the phi == |P| + |C+| + |C-| invariant
+and (b) decode losslessly back to the exact live edge set.  This is the
+standing verification bar for engine changes (ROADMAP open items).
+"""
+import pytest
+
+from repro.core.engine import BatchedSummarizer, EngineConfig, ShardedSummarizer
+from repro.core.reference.dynamic_summary import DynamicSummary
+from repro.core.summary import pair_key
+from repro.graph.streams import edges_to_fully_dynamic_stream, sbm_edges
+
+from conftest import ground_truth_edges
+
+
+def _cfg(**kw):
+    base = dict(n_cap=256, m_cap=2048, d_cap=48, sn_cap=32, c=8, batch=16,
+                escape=0.3)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_differential_tier_a_vs_tier_b_batchwise(seed):
+    edges = sbm_edges(40, 4, 0.55, 0.04, seed=seed)
+    stream = edges_to_fully_dynamic_stream(edges, delete_prob=0.15,
+                                           seed=seed + 1)
+    cfg = _cfg()
+    bs = BatchedSummarizer(cfg)
+    ref = DynamicSummary()
+    live = set()
+
+    for off in range(0, len(stream), cfg.batch):
+        chunk = stream[off:off + cfg.batch]
+        bs.process(chunk)
+        for (u, v, ins) in chunk:
+            e = (min(u, v), max(u, v))
+            if ins:
+                ref.insert(*e)
+                live.add(e)
+            else:
+                ref.delete(*e)
+                live.discard(e)
+        tag = f"seed={seed} off={off}"
+        # (a) phi invariant in BOTH tiers, after every batch
+        ref_mat = ref.materialize()
+        assert ref.phi == ref_mat.phi == ref.phi_recomputed(), tag
+        eng_mat = bs.materialize()      # also asserts eab vs live edges
+        assert bs.phi == eng_mat.phi == bs.phi_recomputed(), tag
+        # (b) both decode losslessly to the exact live edge set
+        assert ref_mat.decode_edges() == live, tag
+        eng_live = {pair_key(bs._ids[u], bs._ids[v]) for (u, v) in live}
+        assert eng_mat.decode_edges() == eng_live, tag
+
+    assert live == ground_truth_edges(stream)
+    # both tiers end bounded by |E| (phi <= |E| under the optimal encoding)
+    assert ref.phi <= len(live)
+    assert bs.phi <= len(live)
+
+
+def test_differential_final_phi_within_band():
+    """Tier-B phi lands in a band around Tier-A on the same stream: both are
+    randomized greedy searches over the same objective."""
+    edges = sbm_edges(48, 4, 0.6, 0.03, seed=5)
+    stream = edges_to_fully_dynamic_stream(edges, delete_prob=0.1, seed=6)
+    bs = BatchedSummarizer(_cfg(c=12)).run(stream)
+    ref = DynamicSummary()
+    for (u, v, ins) in stream:
+        (ref.insert if ins else ref.delete)(u, v)
+    n_live = len(ground_truth_edges(stream))
+    assert 0 < bs.phi <= n_live
+    assert ref.phi == n_live    # no moves: reference stays at trivial encoding
+    assert bs.phi <= ref.phi    # the trial engine may only improve on trivial
+
+
+def test_sharded_summarizer_matches_ground_truth_single_device():
+    """ShardedSummarizer with 2 logical partitions on however many devices
+    the test process has (1 in tier-1 runs): lossless union decode, phi
+    additivity, and agreement of the invariants per shard."""
+    edges = sbm_edges(44, 4, 0.5, 0.05, seed=11)
+    stream = edges_to_fully_dynamic_stream(edges, delete_prob=0.2, seed=12)
+    cfg = _cfg(n_cap=128, m_cap=1024, batch=8)
+    ss = ShardedSummarizer(cfg, n_shards=2)
+    assert ss.n_shards == 2
+    ss.run(stream)
+
+    truth = ground_truth_edges(stream)
+    assert ss.live_edges() == truth
+    out = ss.materialize()
+    assert len(out.shards) == 2
+    assert out.decode_edges() == truth
+    assert out.phi == ss.phi == sum(ss.shard_phis()) == ss.phi_recomputed()
+    assert ss.num_edges == len(truth)
+    assert 0 < ss.phi <= len(truth)
+    # both partitions actually carried load
+    assert all(int(n) > 0 for n in
+               __import__("numpy").asarray(ss.state.num_edges))

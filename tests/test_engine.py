@@ -5,7 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # container has no hypothesis; deterministic shim
+    from repro.testing.proptest import given, settings, strategies as st
 
 from repro.core.engine import BatchedSummarizer, EngineConfig
 from repro.core.engine.hashtable import (ht_add, ht_delete, ht_load,

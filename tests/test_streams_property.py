@@ -1,0 +1,64 @@
+"""Property-based soundness tests for fully dynamic stream generation."""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # container has no hypothesis; deterministic shim
+    from repro.testing.proptest import given, settings, strategies as st
+
+from repro.graph.streams import (edges_to_fully_dynamic_stream,
+                                 edges_to_insertion_stream,
+                                 erdos_renyi_edges, validate_stream)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(0, 3))
+def test_fd_stream_sound_across_seeds(seed, pidx):
+    """Sect. 2.1 soundness: no deletion of a missing edge, no duplicate
+    insertion of a live edge, for arbitrary seeds and delete probabilities."""
+    delete_prob = (0.0, 0.1, 0.3, 1.0)[pidx]
+    edges = erdos_renyi_edges(24, 50, seed=seed % 9973)
+    stream = edges_to_fully_dynamic_stream(edges, delete_prob=delete_prob,
+                                           seed=seed)
+    assert validate_stream(stream)
+    inserts = [(u, v) for (u, v, ins) in stream if ins]
+    deletes = [(min(u, v), max(u, v)) for (u, v, ins) in stream if not ins]
+    # every edge inserted exactly once, deletions are a sub-multiset-free set
+    assert sorted(inserts) == sorted(edges)
+    assert len(set(deletes)) == len(deletes)
+    assert set(deletes) <= set(edges)
+    assert len(deletes) == len(stream) - len(edges)
+    if delete_prob == 0.0:
+        assert not deletes
+    if delete_prob == 1.0:
+        assert len(deletes) == len(edges)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_insertion_stream_sound_across_seeds(seed):
+    edges = erdos_renyi_edges(20, 40, seed=seed % 7919)
+    stream = edges_to_insertion_stream(edges, seed=seed)
+    assert validate_stream(stream)
+    assert all(ins for (_, _, ins) in stream)
+    assert sorted((u, v) for (u, v, _) in stream) == sorted(edges)
+    # same seed -> same order; shuffle=False preserves input order
+    again = edges_to_insertion_stream(edges, seed=seed)
+    assert again == stream
+    plain = edges_to_insertion_stream(edges, seed=seed, shuffle=False)
+    assert [(u, v) for (u, v, _) in plain] == list(edges)
+
+
+def test_fd_deletion_rate_tracks_delete_prob():
+    """Aggregate deletion frequency ~= delete_prob (law of large numbers:
+    600 edges x 20 seeds, tolerance 4 sigma)."""
+    p = 0.2
+    edges = erdos_renyi_edges(80, 600, seed=0)
+    n_del = n_tot = 0
+    for seed in range(20):
+        stream = edges_to_fully_dynamic_stream(edges, delete_prob=p, seed=seed)
+        n_del += sum(1 for (_, _, ins) in stream if not ins)
+        n_tot += len(edges)
+    rate = n_del / n_tot
+    sigma = (p * (1 - p) / n_tot) ** 0.5
+    assert abs(rate - p) < 4 * sigma, (rate, p, sigma)
