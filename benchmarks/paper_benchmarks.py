@@ -10,7 +10,8 @@ from __future__ import annotations
 import time
 from typing import List, Tuple
 
-from repro.core.engine import BatchedSummarizer, EngineConfig
+from repro.core.engine import (BatchedSummarizer, EngineConfig,
+                               ShardedSummarizer)
 from repro.core.reference import ALGORITHMS, MoSSo, MoSSoSimple
 from repro.graph.streams import (barabasi_albert_edges, copying_model_edges,
                                  edges_to_fully_dynamic_stream,
@@ -155,5 +156,47 @@ def engine_throughput() -> List[Row]:
     return rows
 
 
+def router_throughput(n_nodes: int = 700, deg: int = 4, n_shards: int = 2,
+                      chunk: int = 512) -> List[Row]:
+    """Beyond-paper: sharded stream throughput, host vs device routing.
+
+    Both modes run the same shards over the same FD stream with the same
+    chunk boundaries (so their engines are in lockstep — equal phi is part
+    of the measurement's sanity check); the delta is pure routing cost:
+    host Python bucketing + one dispatch per round vs one fused
+    shard-keys + all_to_all + rounds device program per chunk.
+    """
+    rows: List[Row] = []
+    stream = _stream(n_nodes, deg, seed=9)
+    cfg = EngineConfig(n_cap=2048, m_cap=1 << 14, d_cap=64, sn_cap=48,
+                       c=16, batch=64, escape=0.2)
+    us, phis, overflows = {}, {}, {}
+    for routing in ("device", "host"):
+        ss = ShardedSummarizer(cfg, n_shards=n_shards, routing=routing,
+                               router_chunk=chunk)
+        ss.process(stream[:chunk])           # compile outside the clock
+        t0 = time.time()
+        ss.process(stream[chunk:])
+        _ = ss.phi                           # sync before stopping the clock
+        us[routing] = 1e6 * (time.time() - t0) / max(len(stream) - chunk, 1)
+        phis[routing] = ss.phi
+        rows.append((f"router/{routing}", us[routing],
+                     f"phi={ss.phi} shards={n_shards} "
+                     f"overflows={ss.router_overflows}"))
+        overflows[routing] = ss.router_overflows
+    # lockstep sanity: only guaranteed when the DEVICE run saw no lane
+    # overflow (an overflow legitimately changes its PRNG schedule)
+    assert overflows["device"] or phis["device"] == phis["host"], phis
+    rows.append(("router/speedup", us["device"],
+                 f"host_over_device={us['host']/max(us['device'],1e-9):.2f}x"))
+    return rows
+
+
+def smoke() -> List[Row]:
+    """Tiny-config subset for CI: exercises both routing modes end to end
+    (including the lockstep phi assertion) in well under a minute."""
+    return router_throughput(n_nodes=120, deg=3, n_shards=2, chunk=128)
+
+
 ALL = [fig4_speed, fig5_compression, fig1c_scalability, fig6_parameters,
-       fig7a_graph_properties, engine_throughput]
+       fig7a_graph_properties, engine_throughput, router_throughput]

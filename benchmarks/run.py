@@ -1,4 +1,10 @@
-# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# Paper-table benchmark driver. Prints ``name,us_per_call,derived`` CSV.
+#
+#   python benchmarks/run.py                  # every benchmark
+#   python benchmarks/run.py --only router    # name-filtered subset
+#   python benchmarks/run.py --smoke          # tiny CI config: router path
+#                                             # (host + device) end to end
+import argparse
 import sys
 from pathlib import Path
 
@@ -7,9 +13,23 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 
 def main() -> None:
-    from benchmarks.paper_benchmarks import ALL
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-config subset for CI (exercises the stream "
+                         "router in both routing modes)")
+    ap.add_argument("--only", default=None,
+                    help="run only benchmarks whose function name contains "
+                         "this substring")
+    args = ap.parse_args()
+
+    from benchmarks import paper_benchmarks as pb
+    fns = [pb.smoke] if args.smoke else [
+        fn for fn in pb.ALL
+        if args.only is None or args.only in fn.__name__]
+    if not fns:
+        sys.exit(f"no benchmark matches --only {args.only!r}")
     print("name,us_per_call,derived")
-    for fn in ALL:
+    for fn in fns:
         for (name, us, derived) in fn():
             print(f"{name},{us:.1f},{derived}")
             sys.stdout.flush()

@@ -17,7 +17,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from repro.core.engine.state import EngineConfig, EngineState, new_state
-from repro.core.engine.trial import make_step, step_fn
+from repro.core.engine.trial import make_step
 from repro.core.summary import (ShardedSummaryOutput, SummaryOutput,
                                 encoding_cost, is_superedge, pair_key)
 
@@ -122,8 +122,18 @@ def _relabel_output(out: SummaryOutput, rev: Sequence[object],
 class BatchedSummarizer:
     """Feed a fully dynamic graph stream through the jitted engine step.
 
-    Node ids are remapped into the engine's dense [0, n_cap) id space so
-    callers may use arbitrary hashable node labels.
+    **Id space.** ``process``/``run`` accept arbitrary hashable caller
+    labels and intern them (host-side, encounter order) into the engine's
+    dense ``[0, n_cap)`` id space.  Outputs stay in ENGINE ids:
+    ``live_edges``/``materialize``/``phi_recomputed`` report engine-id
+    pairs; map engine ids back to labels through ``self._rev`` (or map a
+    label-space ground truth into engine ids through ``self._ids``) when
+    comparing — the sharded front-end, by contrast, reports caller labels.
+
+    **Capacity.** One engine, one device: at most ``n_cap`` distinct
+    labels ever seen (asserted at interning time) and ``m_cap`` live edges
+    (a table-sizing contract, unchecked — see :class:`EngineConfig`).
+    Scale past either with :class:`ShardedSummarizer`.
     """
 
     def __init__(self, cfg: EngineConfig | None = None, **overrides) -> None:
@@ -224,31 +234,6 @@ class BatchedSummarizer:
 # --------------------------------------------------------------------------- #
 
 
-def _make_sharded_step(cfg: EngineConfig, mesh):
-    """jit(shard_map) over a stacked [n_shards, ...] state tree.
-
-    Each device owns ``n_shards / n_devices`` independent engine replicas;
-    ``lax.map`` over the local leading axis keeps the engine's control flow
-    (cond/fori) intact instead of paying vmap's both-branches cost.
-    """
-    import jax
-    from jax.experimental.shard_map import shard_map
-    from jax.sharding import PartitionSpec as P
-
-    axis = mesh.axis_names[0]
-    state_sds = jax.eval_shape(lambda: new_state(cfg))
-    st_specs = jax.tree.map(lambda _: P(axis), state_sds)
-
-    def local(st, u, v, ins):
-        return jax.lax.map(
-            lambda a: step_fn(a[0], a[1], a[2], a[3], cfg), (st, u, v, ins))
-
-    return jax.jit(shard_map(
-        local, mesh=mesh,
-        in_specs=(st_specs, P(axis), P(axis), P(axis)),
-        out_specs=st_specs, check_rep=False))
-
-
 class ShardedSummarizer:
     """Edge-partitioned summarization across mesh devices.
 
@@ -260,17 +245,50 @@ class ShardedSummarizer:
     encoding (:class:`ShardedSummaryOutput`); ``phi`` is the sum of shard
     phis since per-pair encodings never span shards.
 
-    Unlike :class:`BatchedSummarizer` (whose outputs stay in engine-id
-    space), ``live_edges``/``materialize`` report CALLER labels, so labels
-    must be mutually orderable (ints, strings, ...) for the canonical pair
-    keys; streaming itself accepts any hashable label.
+    **Id spaces.** Three layers, all host-recoverable:
+
+    * caller labels — any hashable (streaming) / mutually orderable
+      (``live_edges``/``materialize``) values;
+    * gids — dense ints assigned by the host in label-encounter order
+      (``_gid``); the routing key is computed on gids;
+    * per-shard local nids — dense ``[0, n_cap)`` ids the engine state is
+      indexed by, assigned ON DEVICE in delivery order by the intern tables
+      of :mod:`repro.dist.router` (both routing modes assign identically).
+
+    **Routing modes** (``routing=``):
+
+    * ``"device"`` (default) — changes stream through the jit-compiled
+      router: shard keys, a capacity-bounded ``all_to_all`` exchange, and
+      the engine rounds all run in one fused device program per chunk of
+      ``router_chunk`` changes.  Each chunk synchronizes on one scalar (the
+      router's overflow watermark).  When a (source, shard) lane exceeds
+      ``lane_cap``, the un-routed stream suffix falls back to the host path
+      below and ``router_overflows`` counts the spilled changes.
+    * ``"host"`` — the differential reference: the host buckets gids per
+      shard and feeds padded ``[n_shards, batch]`` rounds.  Given identical
+      ``process`` call boundaries (calls no longer than ``router_chunk``)
+      and no overflow, both modes produce bit-identical engine states.
+
+    **Capacity semantics.** Edge partitioning is a vertex cut: a node
+    touching edges in several partitions occupies a local id in each, so
+    per-shard ``n_cap`` must budget the replication factor (see
+    ``src/repro/dist/README.md``).  The host path and the device path both
+    intern on device; exceeding ``n_cap`` increments a per-shard
+    ``n_dropped`` counter and skips the change, and the next host-side
+    sync point (``phi``/``stats``/``materialize``/...) raises
+    ``RuntimeError`` — a dropped change would otherwise silently break
+    losslessness.
     """
 
     def __init__(self, cfg: EngineConfig | None = None, *,
                  mesh=None, n_shards: Optional[int] = None,
+                 routing: str = "device", router_chunk: int = 1024,
+                 lane_cap: Optional[int] = None,
                  **overrides) -> None:
         import jax
         import jax.numpy as jnp
+
+        from repro.dist import router as dist_router
 
         if cfg is None:
             cfg = EngineConfig(**overrides)
@@ -287,7 +305,20 @@ class ShardedSummarizer:
             raise ValueError(
                 f"n_shards={self.n_shards} must be a multiple of the mesh "
                 f"device count {n_dev}")
-        self._step = _make_sharded_step(cfg, mesh)
+        if routing not in ("device", "host"):
+            raise ValueError(f"routing must be 'device' or 'host': {routing}")
+        self.routing = routing
+        # round the chunk up so it splits evenly over the devices
+        self.router_chunk = -(-int(router_chunk) // n_dev) * n_dev
+        self.lane_cap = (dist_router.default_lane_cap(
+            self.router_chunk, n_dev, self.n_shards, cfg.batch)
+            if lane_cap is None
+            else min(int(lane_cap), self.router_chunk // n_dev))
+        self.router_overflows = 0   # changes spilled to the host path
+        self._bucketed = dist_router.make_bucketed_step(cfg, mesh)
+        self._routed = (dist_router.make_routed_step(
+            cfg, mesh, self.n_shards, self.router_chunk, self.lane_cap)
+            if routing == "device" else None)
 
         state1 = new_state(cfg)
         n = self.n_shards
@@ -298,11 +329,13 @@ class ShardedSummarizer:
             step_no=jnp.uint32(cfg.seed)
             + jnp.arange(n, dtype=jnp.uint32) * jnp.uint32(2654435761))
         self.state = stacked
+        ist1 = dist_router.intern_new(cfg)
+        self.intern = jax.tree.map(
+            lambda l: jnp.broadcast_to(l[None], (n,) + l.shape), ist1)
 
-        self._ids: List[Dict[object, int]] = [dict() for _ in range(n)]
-        self._rev: List[List[object]] = [[] for _ in range(n)]
         self._gids: Dict[object, int] = {}
-        self._host_cache: Optional[List[EngineState]] = None
+        self._labels: List[object] = []     # gid -> caller label
+        self._host_cache = None
 
     # ------------------------------------------------------------------ ids
     def _gid(self, label: object) -> int:
@@ -310,39 +343,78 @@ class ShardedSummarizer:
         if g is None:
             g = len(self._gids)
             self._gids[label] = g
+            self._labels.append(label)
         return g
 
     def shard_of(self, u: object, v: object) -> int:
-        """Deterministic owner shard of edge {u, v} (stable across the run)."""
-        return min(self._gid(u), self._gid(v)) % self.n_shards
+        """Deterministic owner shard of a STREAMED edge {u, v}.
 
-    def _nid(self, shard: int, label: object) -> int:
-        ids = self._ids[shard]
-        i = ids.get(label)
-        if i is None:
-            i = len(self._rev[shard])
-            assert i < self.cfg.n_cap, f"shard {shard} node capacity exceeded"
-            ids[label] = i
-            self._rev[shard].append(label)
-        return i
+        Read-only: raises ``LookupError`` for labels this summarizer has
+        not seen yet.  (Assigning gids here would silently shift every
+        later label's routing — and desynchronize a differential pair of
+        runs — just by *querying* placement.)
+        """
+        try:
+            gu, gv = self._gids[u], self._gids[v]
+        except KeyError as e:
+            raise LookupError(
+                f"shard_of: label {e.args[0]!r} has not been streamed; "
+                f"gids (and therefore placement) are assigned in stream "
+                f"encounter order") from None
+        return min(gu, gv) % self.n_shards
 
     # --------------------------------------------------------------- stream
     def process(self, changes: Sequence[Change]) -> None:
+        """Apply a sequence of changes, ``router_chunk`` at a time.
+
+        Both routing modes consume the same chunk boundaries, so a host- and
+        a device-routed run fed identical calls stay comparable change for
+        change.
+        """
+        changes = list(changes)
+        for off in range(0, len(changes), self.router_chunk):
+            chunk = changes[off:off + self.router_chunk]
+            if self.routing == "device":
+                self._process_chunk_device(chunk)
+            else:
+                self._process_chunk_host(chunk)
+
+    def _process_chunk_host(self, chunk: Sequence[Change]) -> None:
+        """Host routing: bucket gids per shard, feed padded rounds."""
         n, b = self.n_shards, self.cfg.batch
         buckets: List[List[Tuple[int, int, bool]]] = [[] for _ in range(n)]
-        for (u, v, ins) in changes:
-            s = self.shard_of(u, v)
-            buckets[s].append((self._nid(s, u), self._nid(s, v), ins))
+        for (u, v, ins) in chunk:
+            gu, gv = self._gid(u), self._gid(v)
+            buckets[min(gu, gv) % n].append((gu, gv, ins))
         rounds = (max((len(q) for q in buckets), default=0) + b - 1) // b
         for r in range(rounds):
-            u = np.full((n, b), -1, np.int32)
-            v = np.full((n, b), -1, np.int32)
-            ins = np.zeros((n, b), bool)
+            gu = np.full((n, b), -1, np.int32)
+            gv = np.full((n, b), -1, np.int32)
+            fl = np.zeros((n, b), np.int32)
             for s in range(n):
                 for j, (a, c, f) in enumerate(buckets[s][r * b:(r + 1) * b]):
-                    u[s, j], v[s, j], ins[s, j] = a, c, f
-            self.state = self._step(self.state, u, v, ins)
+                    gu[s, j], gv[s, j], fl[s, j] = a, c, f
+            self.state, self.intern = self._bucketed(
+                self.state, self.intern, gu, gv, fl)
         self._host_cache = None
+
+    def _process_chunk_device(self, chunk: Sequence[Change]) -> None:
+        """Device routing: one fused router dispatch per chunk; the suffix
+        from the first lane overflow (if any) replays via the host path so
+        stream order — and therefore losslessness — is preserved."""
+        c = self.router_chunk
+        gu = np.full((c,), -1, np.int32)
+        gv = np.full((c,), -1, np.int32)
+        fl = np.zeros((c,), np.int32)
+        for i, (u, v, ins) in enumerate(chunk):
+            gu[i], gv[i], fl[i] = self._gid(u), self._gid(v), ins
+        self.state, self.intern, first = self._routed(
+            self.state, self.intern, gu, gv, fl)
+        self._host_cache = None
+        i0 = int(np.asarray(first).min())    # per-chunk sync (fallback gate)
+        if i0 < len(chunk):
+            self.router_overflows += len(chunk) - i0
+            self._process_chunk_host(chunk[i0:])
 
     def run(self, stream: Iterable[Change]) -> "ShardedSummarizer":
         self.process(list(stream))
@@ -350,27 +422,63 @@ class ShardedSummarizer:
 
     # ---------------------------------------------------------------- stats
     def host_states(self) -> List[EngineState]:
-        """All shard states as host arrays: one device transfer, memoized
-        until the next ``process`` call mutates the device state."""
+        """All shard engine states as host arrays: one device transfer,
+        memoized until the next ``process`` call mutates the device state.
+        Engine states index nodes by per-shard local nid."""
+        return self._host_fetch()[0]
+
+    def host_interns(self) -> List["object"]:
+        """Per-shard intern states (gid <-> local nid maps) on the host."""
+        return self._host_fetch()[1]
+
+    def _host_fetch(self):
         if self._host_cache is None:
             import jax
-            stacked = jax.device_get(self.state)
-            self._host_cache = [jax.tree.map(lambda x: x[s], stacked)
-                                for s in range(self.n_shards)]
+            est, ist = jax.device_get((self.state, self.intern))
+            self._host_cache = (
+                [jax.tree.map(lambda x: x[s], est)
+                 for s in range(self.n_shards)],
+                [jax.tree.map(lambda x: x[s], ist)
+                 for s in range(self.n_shards)])
+        self._check_capacity()
         return self._host_cache
+
+    def _check_capacity(self) -> None:
+        if self._host_cache is not None:   # free: counters already fetched
+            dropped = sum(int(i.n_dropped) for i in self._host_cache[1])
+        else:
+            dropped = int(np.asarray(self.intern.n_dropped).sum())
+        self._raise_if_dropped(dropped)
+
+    def _raise_if_dropped(self, dropped: int) -> None:
+        if dropped:
+            raise RuntimeError(
+                f"node capacity exceeded: {dropped} endpoint interns dropped "
+                f"(per-shard n_cap={self.cfg.n_cap}; raise n_cap or n_shards "
+                f"— losslessness does not hold for the dropped changes)")
+
+    def _shard_rev(self, shard: int) -> List[object]:
+        """nid -> caller label for one shard, from the device intern map."""
+        ist = self.host_interns()[shard]
+        n = int(ist.n_nodes)
+        return [self._labels[int(g)] for g in np.asarray(ist.l2g)[:n]]
 
     def shard_state(self, shard: int) -> EngineState:
         return self.host_states()[shard]
 
     def shard_phis(self) -> List[int]:
+        self._check_capacity()
         return [int(x) for x in np.asarray(self.state.phi)]
 
     @property
     def phi(self) -> int:
+        """Global objective: sum of shard phis (per-pair encodings never
+        span shards, so the union-of-parts cost is exactly additive)."""
         return sum(self.shard_phis())
 
     @property
     def num_edges(self) -> int:
+        self._check_capacity()
         return int(np.asarray(self.state.num_edges).sum())
 
     def compression_ratio(self) -> float:
@@ -378,29 +486,45 @@ class ShardedSummarizer:
         return float(self.phi) / e if e else 0.0
 
     def stats(self) -> dict:
+        """Aggregate engine counters plus routing telemetry:
+        ``router_overflows`` counts changes that spilled from the device
+        router's capacity-bounded lanes back to the host path (always 0 in
+        ``routing="host"`` mode).  One device transfer (counters only)."""
+        import jax
         s = self.state
-        tot = lambda x: int(np.asarray(x).sum())  # noqa: E731
-        return dict(phi=self.phi, num_edges=tot(s.num_edges),
-                    trials=tot(s.n_trials), accepted=tot(s.n_accept),
-                    skipped=tot(s.n_skipped), n_shards=self.n_shards)
+        phi, ne, tr, ac, sk, dr = jax.device_get(
+            (s.phi, s.num_edges, s.n_trials, s.n_accept, s.n_skipped,
+             self.intern.n_dropped))
+        self._raise_if_dropped(int(np.sum(dr)))
+        tot = lambda x: int(np.sum(x))  # noqa: E731
+        return dict(phi=tot(phi), num_edges=tot(ne),
+                    trials=tot(tr), accepted=tot(ac),
+                    skipped=tot(sk), n_shards=self.n_shards,
+                    routing=self.routing,
+                    router_overflows=self.router_overflows)
 
     # ------------------------------------------------------------ materialize
     def live_edges(self) -> Set[Tuple[object, object]]:
         """Union of per-shard live edges, mapped back to caller labels."""
         out: Set[Tuple[object, object]] = set()
         for s, st in enumerate(self.host_states()):
-            rev = self._rev[s]
+            rev = self._shard_rev(s)
             for (a, b) in state_live_edges(st):
                 out.add(pair_key(rev[a], rev[b]))
         return out
 
     def materialize(self) -> ShardedSummaryOutput:
-        """Merged host-side output: per-shard lossless summaries in label
-        space, supernode ids offset into disjoint per-shard ranges."""
+        """Merged host-side output: per-shard lossless summaries in caller
+        label space, supernode ids offset into disjoint per-shard ranges
+        (``shard * n_cap``).  The relabeling reads the device intern maps,
+        so it is exact under router-batched delivery: whatever order the
+        all_to_all delivered changes in, ``l2g`` records the resulting nid
+        assignment."""
         shards = []
         for s, st in enumerate(self.host_states()):
             out = state_materialize(st)
-            shards.append(_relabel_output(out, self._rev[s], s * self.cfg.n_cap))
+            shards.append(
+                _relabel_output(out, self._shard_rev(s), s * self.cfg.n_cap))
         return ShardedSummaryOutput(shards=shards)
 
     def phi_recomputed(self) -> int:

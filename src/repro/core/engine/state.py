@@ -23,7 +23,29 @@ NO_CLUSTER = jnp.int32(0x7FFFFFFF)
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    n_cap: int = 1 << 14          # max distinct nodes
+    """Capacity and search parameters of one engine instance.
+
+    **Id space.** The engine is oblivious to caller labels: it consumes
+    dense node ids in ``[0, n_cap)`` (every state array below is indexed by
+    them).  Front-ends own the translation — ``BatchedSummarizer`` interns
+    labels on the host; ``ShardedSummarizer`` interns per shard on device
+    (``repro/dist/router.py``), so under sharding ``n_cap`` is a PER-SHARD
+    budget and, edge partitioning being a vertex cut, must cover the node
+    replication factor, not just ``|V| / n_shards``.
+
+    **Capacity semantics.** ``n_cap`` is hard: interning past it fails
+    fast (host assert in ``BatchedSummarizer``, or a device drop counter
+    that raises at the next sync under sharding).  ``m_cap`` is a sizing
+    contract, not a checked bound: it fixes the hash-table capacities
+    (``table_caps``) at ~4x their worst-case live entries, so streaming
+    more than ``m_cap`` live edges degrades probe chains instead of
+    erroring — monitor ``table_pressure()``/``maybe_compact()`` on long
+    streams.  ``d_cap``/``sn_cap`` are soft trial bounds: trials that
+    would exceed them are skipped — never corrupted — and counted in
+    ``n_skipped`` (DESIGN deviation #1).
+    """
+
+    n_cap: int = 1 << 14          # max distinct nodes (per engine/shard)
     m_cap: int = 1 << 17          # max live undirected edges
     d_cap: int = 64               # movable-node degree bound (deviation #1)
     sn_cap: int = 32              # supernode-adjacency bound for moves

@@ -97,6 +97,17 @@ class ShardedSummaryOutput:
     shard's correction must never subtract an edge owned by another shard,
     which is why the parts are kept rather than flattened into one
     :class:`SummaryOutput`.
+
+    The merge is insensitive to DELIVERY ORDER: whether changes reached a
+    shard through host bucketing or through the device router's
+    ``all_to_all`` batches (``repro/dist/router.py``), each edge has exactly
+    one owner shard (canonical-pair keying), so the per-shard summaries
+    cover disjoint edge sets and the union — and the additive ``phi`` — are
+    the same.  What delivery order *does* fix is each shard's internal node
+    numbering; producers therefore relabel every part back to caller labels
+    (via the device intern maps) and offset supernode ids into disjoint
+    per-shard ranges before constructing this object.  ``validate()``
+    checks the structural half of that contract.
     """
 
     shards: List[SummaryOutput]
@@ -105,6 +116,9 @@ class ShardedSummaryOutput:
     def phi(self) -> int:
         """Global objective: per-pair encodings are disjoint across shards."""
         return sum(s.phi for s in self.shards)
+
+    def phi_by_shard(self) -> List[int]:
+        return [s.phi for s in self.shards]
 
     def decode_edges(self) -> Set[Pair]:
         edges: Set[Pair] = set()
@@ -119,6 +133,33 @@ class ShardedSummaryOutput:
             for mem in s.supernodes.values():
                 nodes |= mem
         return len(nodes)
+
+    def validate(self) -> "ShardedSummaryOutput":
+        """Assert the union-of-parts invariants; returns self for chaining.
+
+        * supernode id ranges are pairwise disjoint across shards (so the
+          union never aliases two shards' supernodes), and
+        * every part satisfies phi == |P| + |C+| + |C-| by construction
+          (``SummaryOutput.phi`` is definitional; here we check each part's
+          correction sets stay inside its own supernode universe).
+        """
+        seen_sids: Set[int] = set()
+        for i, s in enumerate(self.shards):
+            sids = set(s.supernodes)
+            overlap = sids & seen_sids
+            assert not overlap, f"shard {i} reuses supernode ids {overlap}"
+            seen_sids |= sids
+            members: Set[int] = set()
+            for mem in s.supernodes.values():
+                members |= mem
+            for (a, b) in s.superedges:
+                assert a in sids and b in sids, \
+                    f"shard {i} superedge {(a, b)} leaves its sid range"
+            for pair_set, name in ((s.c_plus, "C+"), (s.c_minus, "C-")):
+                for (u, v) in pair_set:
+                    assert u in members and v in members, \
+                        f"shard {i} {name} pair {(u, v)} names a foreign node"
+        return self
 
 
 @dataclass

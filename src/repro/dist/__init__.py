@@ -1,12 +1,31 @@
-"""Distribution layer: logical-axis annotation, sharding rules, collectives.
+"""Distribution layer: annotation, sharding rules, collectives, routing.
 
 ``annotate`` must import before ``sharding``: resolving the rule tables pulls
 in :mod:`repro.configs`, whose arch modules import the model code, which in
 turn imports ``repro.dist.annotate`` — keeping annotate first makes that
 cycle re-entrant-safe.
+
+``router`` resolves lazily (PEP 562, like the rule tables in ``sharding``)
+for two reasons: it imports the engine package, so an eager import here
+would re-enter :mod:`repro.core.engine` half-initialized whenever the
+engine side is imported first; and the engine's module-level jnp constants
+initialize the JAX backend, which would break this package's guarantee of
+touching no jax device state at import time (model modules import
+``repro.dist`` at import time, often before the caller sets
+``XLA_FLAGS``).
 """
 from repro.dist import annotate          # noqa: F401  (import order matters)
 from repro.dist import collectives       # noqa: F401
 from repro.dist import sharding          # noqa: F401
 
-__all__ = ["annotate", "collectives", "sharding"]
+
+def __getattr__(name):  # PEP 562: keep `import repro.dist` device-state-free
+    if name == "router":
+        # NOT `from repro.dist import router` — the fromlist resolver calls
+        # back into this __getattr__ and recurses
+        import importlib
+        return importlib.import_module("repro.dist.router")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = ["annotate", "collectives", "sharding", "router"]

@@ -1,0 +1,299 @@
+"""Device-side stream router for edge-partitioned summarization.
+
+:class:`~repro.core.engine.api.ShardedSummarizer` partitions the edge stream
+over a fleet of engine replicas by canonical-pair key
+``min(gid(u), gid(v)) % n_shards``.  Until this module existed the routing
+ran on the host — a Python loop bucketing every change — so aggregate
+*capacity* scaled with the shard count while *throughput* did not.  The
+router moves the partition-and-exchange onto the devices:
+
+1. The host hands the router one flat, gid-encoded chunk of changes
+   (``-1``-padded to a fixed ``chunk`` length, split contiguously over the
+   mesh so device ``d`` holds stream positions ``[d*n_in, (d+1)*n_in)``).
+2. Each source device computes the shard key of its changes and scatters
+   them into a capacity-bounded send buffer of ``lane_cap`` slots per
+   (source device, destination shard) lane.
+3. One ``lax.all_to_all`` inside the existing ``shard_map`` region delivers
+   every lane to the device owning its destination shard; the receiver
+   compacts the lanes source-major, which reconstructs global stream order
+   (source slices are contiguous in the stream and ranks preserve order
+   within a lane).
+4. Each shard interns the received gids into its dense local id space
+   (:class:`InternState`, first-come-first-served — the same order host
+   bucketing would produce) and runs ``ceil(max_count / batch)`` engine
+   rounds, the round count agreed across shards with ``lax.pmax`` so every
+   replica advances its PRNG stream identically.
+
+**Overflow contract.** A lane holds at most ``lane_cap`` changes per routed
+chunk.  Rather than dropping or reordering on overflow, the router computes
+the first overflowing *stream position* (``lax.pmin`` across devices), routes
+only the prefix before it, and reports that position; the caller then feeds
+the suffix through the host-routed path (:func:`make_bucketed_step`), which
+shares the device-side intern state, so losslessness and stream order are
+preserved — only the PRNG schedule differs from the no-overflow trajectory.
+Overflowed changes are counted in ``ShardedSummarizer.router_overflows``.
+
+**Why both paths intern on device.** Trial randomness depends on local node
+ids (they seed the min-hash clustering), so host- and device-routed runs are
+bit-identical only if both assign ids in the same per-shard order.  Keeping
+the gid -> local-id map in device memory (a :mod:`~repro.core.engine.hashtable`
+open-addressing table per shard) gives both paths one source of truth and
+makes the host path a true differential reference for the router.
+
+SPMD hazard audit (docs/KNOWN_ISSUES.md): all gather/scatter here happens
+*inside* ``shard_map`` on per-device local arrays, so the GSPMD
+concat-of-aligned-slices pattern that miscompiled ``apply_rope`` cannot
+arise — the partitioner never sees these concatenations.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.engine.hashtable import HashTable, ht_find, ht_new, ht_set
+from repro.core.engine.state import EngineConfig, new_state
+from repro.core.engine.trial import step_fn
+
+INVALID = jnp.int32(-1)
+
+
+# --------------------------------------------------------------------------- #
+# device-resident gid -> local-nid interning
+# --------------------------------------------------------------------------- #
+
+
+class InternState(NamedTuple):
+    """Per-shard device-resident node intern table.
+
+    Maps global ids (gids, assigned by the host in label-encounter order) to
+    the shard's dense local id space ``[0, n_cap)`` that the engine state
+    arrays are indexed by.  ``l2g`` is the reverse map used by
+    ``materialize``/``live_edges`` to translate summaries back to caller
+    labels, so delivery order (which fixes nid assignment) is fully
+    recoverable on the host.
+    """
+
+    g2l: HashTable      # (gid, 0) -> local nid
+    l2g: jax.Array      # int32[n_cap]: local nid -> gid (-1 unset)
+    n_nodes: jax.Array  # int32: next fresh nid == number interned
+    n_dropped: jax.Array  # int32: endpoint interns dropped at full capacity
+
+
+def intern_new(cfg: EngineConfig) -> InternState:
+    cap = 1
+    while cap < 4 * cfg.n_cap:   # ~25% max load keeps probes O(1)
+        cap <<= 1
+    return InternState(
+        g2l=ht_new(cap),
+        l2g=jnp.full((cfg.n_cap,), -1, jnp.int32),
+        n_nodes=jnp.int32(0),
+        n_dropped=jnp.int32(0),
+    )
+
+
+def _intern_one(ist: InternState, gid: jax.Array, valid: jax.Array,
+                n_cap: int) -> Tuple[InternState, jax.Array]:
+    """Dense first-come-first-served nid for gid; -1 when invalid/dropped."""
+    g = jnp.where(valid, gid, 0)
+    slot, found = ht_find(ist.g2l, g, 0)
+    existing = ist.g2l.val[slot]
+    fresh = valid & ~found
+    room = ist.n_nodes < n_cap
+    take = fresh & room
+    nid_new = ist.n_nodes
+
+    def ins(i: InternState) -> InternState:
+        return i._replace(
+            g2l=ht_set(i.g2l, g, 0, nid_new),
+            l2g=i.l2g.at[nid_new].set(g),
+            n_nodes=i.n_nodes + 1)
+
+    ist = jax.lax.cond(take, ins, lambda i: i, ist)
+    ist = ist._replace(
+        n_dropped=ist.n_dropped + (fresh & ~room).astype(jnp.int32))
+    nid = jnp.where(found, existing, jnp.where(take, nid_new, INVALID))
+    return ist, jnp.where(valid, nid, INVALID)
+
+
+def intern_changes(ist: InternState, gu: jax.Array, gv: jax.Array,
+                   n_cap: int) -> Tuple[InternState, jax.Array, jax.Array]:
+    """Intern a change sequence in order: ``(ist, u_nid, v_nid)``.
+
+    A change with a dropped endpoint (shard node capacity hit) maps to
+    ``(-1, -1)`` — the engine skips it and ``n_dropped`` records the event
+    for the host to surface.
+    """
+
+    def body(ist, ch):
+        gu_i, gv_i = ch
+        valid = (gu_i >= 0) & (gv_i >= 0)
+        ist, nu = _intern_one(ist, gu_i, valid, n_cap)
+        ist, nv = _intern_one(ist, gv_i, valid, n_cap)
+        ok = (nu >= 0) & (nv >= 0)
+        return ist, (jnp.where(ok, nu, INVALID), jnp.where(ok, nv, INVALID))
+
+    ist, (u, v) = jax.lax.scan(body, ist, (gu, gv))
+    return ist, u, v
+
+
+# --------------------------------------------------------------------------- #
+# host-routed (bucketed) step — the differential reference + overflow path
+# --------------------------------------------------------------------------- #
+
+
+def _state_specs(cfg: EngineConfig, axis: str):
+    est_sds = jax.eval_shape(lambda: new_state(cfg))
+    ist_sds = jax.eval_shape(lambda: intern_new(cfg))
+    return (jax.tree.map(lambda _: P(axis), est_sds),
+            jax.tree.map(lambda _: P(axis), ist_sds))
+
+
+def make_bucketed_step(cfg: EngineConfig, mesh):
+    """jit(shard_map) step consuming host-bucketed ``[n_shards, batch]`` gid
+    rounds.  Bucketing/packing happens on the host; interning and the engine
+    step run on device (``lax.map`` lays multiple shard replicas per device,
+    keeping the engine's control flow intact instead of paying vmap's
+    both-branches cost)."""
+    axis = mesh.axis_names[0]
+    est_specs, ist_specs = _state_specs(cfg, axis)
+
+    def one(args):
+        est, ist, gu, gv, ins = args
+        ist, u, v = intern_changes(ist, gu, gv, cfg.n_cap)
+        return step_fn(est, u, v, ins != 0, cfg), ist
+
+    def local(est, ist, gu, gv, ins):
+        return jax.lax.map(one, (est, ist, gu, gv, ins))
+
+    return jax.jit(shard_map(
+        local, mesh=mesh,
+        in_specs=(est_specs, ist_specs, P(axis), P(axis), P(axis)),
+        out_specs=(est_specs, ist_specs), check_rep=False))
+
+
+# --------------------------------------------------------------------------- #
+# device-routed step — shard keys, all_to_all exchange, engine rounds
+# --------------------------------------------------------------------------- #
+
+
+def make_routed_step(cfg: EngineConfig, mesh, n_shards: int, chunk: int,
+                     lane_cap: int):
+    """Compile the device-resident router for a fixed geometry.
+
+    Returns a jitted ``(est, ist, gu, gv, ins) -> (est, ist, first)`` where
+    the inputs are the stacked per-shard states plus flat ``[chunk]``
+    gid-encoded change arrays (``-1`` padded) and ``first`` is, per device,
+    the first stream position NOT routed because its (source, shard) lane
+    overflowed ``lane_cap`` — ``chunk`` when everything was delivered.
+    """
+    axis = mesh.axis_names[0]
+    n_dev = int(mesh.devices.size)
+    n_loc = n_shards // n_dev
+    if chunk % n_dev != 0:
+        raise ValueError(f"chunk={chunk} must be divisible by n_dev={n_dev}")
+    n_in = chunk // n_dev        # stream positions per source device
+    lane_cap = min(lane_cap, n_in)   # a lane can't exceed its source slice
+    r_cap = n_dev * lane_cap     # max deliverable per shard per chunk
+    b = cfg.batch
+    est_specs, ist_specs = _state_specs(cfg, axis)
+
+    def local(est, ist, gu, gv, ins):
+        # est/ist stacked [n_loc, ...]; gu/gv/ins local [n_in]
+        me = jax.lax.axis_index(axis)
+        valid = (gu >= 0) & (gv >= 0)
+        dest = jnp.where(valid, jnp.minimum(gu, gv) % n_shards, n_shards)
+
+        # rank of each change within its (source, dest) lane; order-stable
+        onehot = dest[:, None] == jnp.arange(n_shards, dtype=jnp.int32)[None]
+        cum = jnp.cumsum(onehot.astype(jnp.int32), axis=0)
+        rank = jnp.take_along_axis(
+            cum, jnp.clip(dest, 0, n_shards - 1)[:, None], axis=1)[:, 0] - 1
+
+        # capacity bound: route only the stream prefix before the first
+        # overflowing position so the caller can replay the suffix in order
+        pos = me * n_in + jnp.arange(n_in, dtype=jnp.int32)
+        over = valid & (rank >= lane_cap)
+        my_first = jnp.min(jnp.where(over, pos, jnp.int32(chunk)))
+        first = jax.lax.pmin(my_first, axis)
+        keep = valid & (rank < lane_cap) & (pos < first)
+
+        # scatter kept changes into the [n_dev, n_loc, lane_cap] send lanes
+        dd = jnp.where(keep, dest // n_loc, n_dev)   # OOB index -> dropped
+        dl = jnp.where(keep, dest % n_loc, 0)
+        rk = jnp.where(keep, rank, 0)
+        payload = jnp.stack([gu, gv, ins.astype(jnp.int32)], axis=-1)
+        send = jnp.full((n_dev, n_loc, lane_cap, 3), -1, jnp.int32)
+        send = send.at[dd, dl, rk].set(payload, mode="drop")
+
+        # exchange: recv[j, l] = source j's lane for my local shard l
+        recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0,
+                                  tiled=True)
+        # source-major flatten per shard == global stream order
+        recv = jnp.swapaxes(recv, 0, 1).reshape(n_loc, r_cap, 3)
+        rgu, rgv, rins = recv[..., 0], recv[..., 1], recv[..., 2]
+
+        # stable compaction of each shard's bucket to the front
+        rvalid = rgu >= 0
+        cpos = jnp.cumsum(rvalid.astype(jnp.int32), axis=1) - 1
+        idx = jnp.where(rvalid, cpos, r_cap)
+        rows = jnp.arange(n_loc, dtype=jnp.int32)[:, None]
+        pad_row = jnp.full((n_loc, r_cap), -1, jnp.int32)
+        cgu = pad_row.at[rows, idx].set(rgu, mode="drop")
+        cgv = pad_row.at[rows, idx].set(rgv, mode="drop")
+        cins = jnp.zeros((n_loc, r_cap), jnp.int32).at[rows, idx].set(
+            rins, mode="drop")
+        counts = rvalid.sum(axis=1).astype(jnp.int32)
+
+        # intern each shard's whole bucket up front — the same order host
+        # bucketing interns in, so both paths assign identical local ids
+        def int_one(args):
+            ist_l, gu_l, gv_l = args
+            return intern_changes(ist_l, gu_l, gv_l, cfg.n_cap)
+
+        ist, u_all, v_all = jax.lax.map(int_one, (ist, cgu, cgv))
+
+        # one spare round of padding so dynamic_slice never clamps
+        u_all = jnp.concatenate(
+            [u_all, jnp.full((n_loc, b), -1, jnp.int32)], axis=1)
+        v_all = jnp.concatenate(
+            [v_all, jnp.full((n_loc, b), -1, jnp.int32)], axis=1)
+        i_all = jnp.concatenate(
+            [cins, jnp.zeros((n_loc, b), jnp.int32)], axis=1)
+
+        # every shard steps the same number of rounds (uniform PRNG advance,
+        # matching the host path's ceil(max_bucket / batch) schedule)
+        rounds = jax.lax.pmax(jnp.max((counts + b - 1) // b), axis)
+
+        def round_body(carry):
+            r, est = carry
+
+            def one(args):
+                est_l, u_l, v_l, i_l = args
+                us = jax.lax.dynamic_slice(u_l, (r * b,), (b,))
+                vs = jax.lax.dynamic_slice(v_l, (r * b,), (b,))
+                fs = jax.lax.dynamic_slice(i_l, (r * b,), (b,)) != 0
+                return step_fn(est_l, us, vs, fs, cfg)
+
+            return r + 1, jax.lax.map(one, (est, u_all, v_all, i_all))
+
+        _, est = jax.lax.while_loop(
+            lambda c: c[0] < rounds, round_body, (jnp.int32(0), est))
+        return est, ist, first[None]
+
+    return jax.jit(shard_map(
+        local, mesh=mesh,
+        in_specs=(est_specs, ist_specs, P(axis), P(axis), P(axis)),
+        out_specs=(est_specs, ist_specs, P(axis)), check_rep=False))
+
+
+def default_lane_cap(chunk: int, n_dev: int, n_shards: int,
+                     batch: int) -> int:
+    """4x-headroom lane size over the balanced expectation, floored at one
+    engine batch and capped at the source slice (beyond which a lane cannot
+    fill) — overflows then only occur under heavy key skew."""
+    balanced = -(-chunk // (n_dev * n_shards))   # ceil
+    return min(max(batch, 4 * balanced), chunk // n_dev)

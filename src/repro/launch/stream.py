@@ -1,20 +1,27 @@
 """MoSSo streaming driver: summarize a dynamic graph stream end to end.
 
-Runs either the faithful reference (Tier A) or the batched engine (Tier B)
-over a synthetic or file-based stream, reporting phi, the compression ratio
-(Eq. 3), and per-change timing — the paper's any-time workload as a CLI.
+Runs the faithful reference (Tier A), the batched engine (Tier B), or the
+edge-partitioned sharded engine over a synthetic or file-based stream,
+reporting phi, the compression ratio (Eq. 3), and per-change timing — the
+paper's any-time workload as a CLI.  The sharded engine streams batches
+through the device-side router by default (``--routing device``); pass
+``--routing host`` to drive the same shards through host bucketing, the
+differential reference path.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.stream --algo mosso --nodes 2000 \
       --edges 8000 --engine reference
   PYTHONPATH=src python -m repro.launch.stream --engine batched --batch 64
+  PYTHONPATH=src python -m repro.launch.stream --engine sharded --shards 2 \
+      --routing device --router-chunk 1024
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-from repro.core.engine import BatchedSummarizer, EngineConfig
+from repro.core.engine import (BatchedSummarizer, EngineConfig,
+                               ShardedSummarizer)
 from repro.core.reference import ALGORITHMS
 from repro.graph.streams import (barabasi_albert_edges, copying_model_edges,
                                  edges_to_fully_dynamic_stream,
@@ -34,8 +41,16 @@ def make_stream(kind: str, nodes: int, edges_per_node: int, beta: float,
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--engine", choices=["reference", "batched"],
+    ap.add_argument("--engine", choices=["reference", "batched", "sharded"],
                     default="reference")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="sharded: logical partitions (default: one/device)")
+    ap.add_argument("--routing", choices=["device", "host"], default="device",
+                    help="sharded: device-side router or host bucketing")
+    ap.add_argument("--router-chunk", type=int, default=1024,
+                    help="sharded: changes per routed dispatch")
+    ap.add_argument("--lane-cap", type=int, default=None,
+                    help="sharded: per (source, shard) router lane capacity")
     ap.add_argument("--algo", choices=list(ALGORITHMS), default="mosso")
     ap.add_argument("--graph", choices=["ba", "copying"], default="ba")
     ap.add_argument("--nodes", type=int, default=2000)
@@ -61,7 +76,7 @@ def main() -> None:
         algo.run(stream)
         phi, m = algo.s.phi, algo.s.num_edges
         extra = f"trials={algo.stats.trials} accepted={algo.stats.accepted}"
-    else:
+    elif args.engine == "batched":
         n_cap = 1 << max(8, (args.nodes * 2).bit_length())
         m_cap = 1 << max(10, (len(stream) * 2).bit_length())
         bs = BatchedSummarizer(EngineConfig(
@@ -70,6 +85,19 @@ def main() -> None:
         bs.run(stream)
         phi, m = bs.phi, bs.num_edges
         extra = str(bs.stats())
+    else:
+        # per-shard caps: vertex-cut replication means n_cap budgets more
+        # than |V| / n_shards (src/repro/dist/README.md)
+        n_cap = 1 << max(8, (args.nodes * 2).bit_length())
+        m_cap = 1 << max(10, (len(stream) * 2).bit_length())
+        ss = ShardedSummarizer(
+            EngineConfig(n_cap=n_cap, m_cap=m_cap, c=args.c,
+                         escape=args.escape, batch=args.batch),
+            n_shards=args.shards, routing=args.routing,
+            router_chunk=args.router_chunk, lane_cap=args.lane_cap)
+        ss.run(stream)
+        phi, m = ss.phi, ss.num_edges
+        extra = str(ss.stats())
     el = time.time() - t0
     print(f"phi={phi} |E|={m} compression_ratio={phi/max(m,1):.4f}")
     print(f"total {el:.1f}s ({1e6*el/len(stream):.0f} us/change)  {extra}")

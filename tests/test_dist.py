@@ -167,6 +167,41 @@ def test_sharded_summarizer_lossless_across_8_devices():
     """))
 
 
+def test_device_router_matches_host_routing_across_8_devices():
+    """Host-vs-device routing differential on a real 8-device all_to_all,
+    with n_shards=16 so each device carries two shard replicas (the router's
+    lane layout is [n_dev, n_loc, lane_cap])."""
+    print(run_py("""
+        import jax, numpy as np
+        from repro.core.engine import EngineConfig, ShardedSummarizer
+        from repro.graph.streams import edges_to_fully_dynamic_stream, sbm_edges
+
+        assert len(jax.devices()) == 8
+        cfg = EngineConfig(n_cap=128, m_cap=1024, d_cap=32, sn_cap=24,
+                           c=8, batch=8, escape=0.3)
+        edges = sbm_edges(72, 6, 0.5, 0.04, seed=7)
+        stream = edges_to_fully_dynamic_stream(edges, delete_prob=0.2, seed=8)
+        kw = dict(n_shards=16, router_chunk=128)
+        dev = ShardedSummarizer(cfg, routing="device", **kw)
+        host = ShardedSummarizer(cfg, routing="host", **kw)
+        live = set()
+        for off in range(0, len(stream), 128):
+            chunk = stream[off:off + 128]
+            dev.process(chunk); host.process(chunk)
+            for (u, v, ins) in chunk:
+                e = (min(u, v), max(u, v))
+                live.add(e) if ins else live.discard(e)
+            assert dev.router_overflows == 0
+            assert dev.shard_phis() == host.shard_phis(), off
+            assert dev.materialize().decode_edges() == live, off
+            assert host.materialize().decode_edges() == live, off
+        assert dev.live_edges() == live
+        assert 0 < dev.phi <= len(live)
+        print("8-device router differential OK: phi", dev.phi,
+              "|E|", len(live))
+    """))
+
+
 def test_data_parallel_wrapper_and_cache():
     print(run_py("""
         import jax, jax.numpy as jnp, numpy as np

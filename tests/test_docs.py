@@ -1,0 +1,24 @@
+"""Documentation integrity: relative markdown links must resolve.
+
+The same check runs as a dedicated CI job (tools/check_md_links.py); having
+it in tier-1 means a doc rename can't land with dangling links even when CI
+is skipped locally.
+"""
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+import check_md_links  # noqa: E402
+
+
+def test_markdown_relative_links_resolve():
+    errors = check_md_links.check(ROOT)
+    assert not errors, "\n".join(errors)
+
+
+def test_core_docs_exist():
+    for rel in ("README.md", "docs/ARCHITECTURE.md", "docs/KNOWN_ISSUES.md",
+                "src/repro/dist/README.md"):
+        assert (ROOT / rel).is_file(), rel

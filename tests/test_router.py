@@ -1,0 +1,135 @@
+"""Host-routed vs device-routed ShardedSummarizer differential tests.
+
+The device router (repro/dist/router.py) must be a drop-in replacement for
+host bucketing: fed the same FD stream with the same ``process`` call
+boundaries, both modes intern nodes in the same per-shard order and advance
+every engine replica's PRNG identically, so the engine states — and hence
+phi — are bit-comparable after every batch.  This extends the standing
+differential verification bar (ROADMAP) to the routing layer.
+"""
+import numpy as np
+import pytest
+
+from repro.core.engine import EngineConfig, ShardedSummarizer
+from repro.graph.streams import edges_to_fully_dynamic_stream, sbm_edges
+
+from conftest import ground_truth_edges
+
+
+def _cfg(**kw):
+    base = dict(n_cap=160, m_cap=1024, d_cap=48, sn_cap=32, c=8, batch=8,
+                escape=0.3)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _stream(seed=11):
+    edges = sbm_edges(44, 4, 0.5, 0.05, seed=seed)
+    return edges_to_fully_dynamic_stream(edges, delete_prob=0.2,
+                                         seed=seed + 1)
+
+
+@pytest.mark.parametrize("n_shards", [1, 2])
+def test_device_vs_host_routing_differential(n_shards):
+    """Identical phi + lossless decode after every batch, 1 device."""
+    stream = _stream()
+    cfg = _cfg()
+    kw = dict(n_shards=n_shards, router_chunk=64)
+    dev = ShardedSummarizer(cfg, routing="device", **kw)
+    host = ShardedSummarizer(cfg, routing="host", **kw)
+    live = set()
+
+    for off in range(0, len(stream), 64):
+        chunk = stream[off:off + 64]
+        dev.process(chunk)
+        host.process(chunk)
+        for (u, v, ins) in chunk:
+            e = (min(u, v), max(u, v))
+            live.add(e) if ins else live.discard(e)
+        tag = f"off={off}"
+        # no lane overflow at this scale: pure device routing throughout
+        assert dev.router_overflows == 0, tag
+        # identical per-shard phi — the engines are in lockstep
+        assert dev.shard_phis() == host.shard_phis(), tag
+        # both satisfy the phi invariant and decode losslessly
+        dm, hm = dev.materialize().validate(), host.materialize().validate()
+        assert dm.phi == dev.phi == dev.phi_recomputed(), tag
+        assert hm.phi == host.phi == host.phi_recomputed(), tag
+        assert dm.decode_edges() == live, tag
+        assert hm.decode_edges() == live, tag
+
+    assert live == ground_truth_edges(stream)
+    assert 0 < dev.phi <= len(live)
+    assert dev.stats()["routing"] == "device"
+    assert host.stats()["routing"] == "host"
+
+
+def test_device_routing_states_bit_identical_to_host():
+    """Beyond phi: every engine-state leaf matches between the modes."""
+    stream = _stream(seed=21)
+    cfg = _cfg()
+    dev = ShardedSummarizer(cfg, routing="device", n_shards=2,
+                            router_chunk=128).run(stream)
+    host = ShardedSummarizer(cfg, routing="host", n_shards=2,
+                             router_chunk=128).run(stream)
+    assert dev.router_overflows == 0
+    for d, h in zip(dev.host_states(), host.host_states()):
+        for name, dl, hl in zip(d._fields, d, h):
+            np.testing.assert_array_equal(
+                np.asarray(dl), np.asarray(hl), err_msg=name)
+    for d, h in zip(dev.host_interns(), host.host_interns()):
+        assert int(d.n_nodes) == int(h.n_nodes)
+        np.testing.assert_array_equal(np.asarray(d.l2g), np.asarray(h.l2g))
+
+
+def test_lane_overflow_falls_back_to_host_path_losslessly():
+    """A tiny lane_cap forces overflow: the spilled suffix replays through
+    the host path in stream order, so the run stays lossless and the
+    overflow is counted and surfaced."""
+    stream = _stream(seed=31)
+    ss = ShardedSummarizer(_cfg(), routing="device", n_shards=2,
+                           router_chunk=64, lane_cap=1)
+    ss.run(stream)
+    assert ss.router_overflows > 0
+    assert ss.stats()["router_overflows"] == ss.router_overflows
+    truth = ground_truth_edges(stream)
+    assert ss.live_edges() == truth
+    out = ss.materialize()
+    assert out.decode_edges() == truth
+    assert out.phi == ss.phi == ss.phi_recomputed()
+
+
+@pytest.mark.parametrize("routing", ["device", "host"])
+def test_node_capacity_drop_raises_at_sync(routing):
+    """Exceeding per-shard n_cap cannot silently lose changes: the device
+    intern counter trips a RuntimeError at the next host sync point."""
+    stream = _stream(seed=41)
+    ss = ShardedSummarizer(_cfg(n_cap=16), routing=routing, n_shards=2,
+                           router_chunk=64)
+    ss.run(stream)    # streaming itself must NOT raise (raise-at-sync)
+    with pytest.raises(RuntimeError, match="node capacity exceeded"):
+        ss.stats()
+
+
+def test_shard_of_is_read_only():
+    """Querying placement must not assign gids (it would desynchronize a
+    differential pair of runs): unseen labels raise instead."""
+    stream = _stream(seed=61)
+    ss = ShardedSummarizer(_cfg(), routing="device", n_shards=2,
+                           router_chunk=64).run(stream)
+    u, v, _ = stream[0]
+    assert ss.shard_of(u, v) == min(ss._gids[u], ss._gids[v]) % 2
+    n_before = len(ss._gids)
+    with pytest.raises(LookupError, match="has not been streamed"):
+        ss.shard_of("never-streamed-a", "never-streamed-b")
+    assert len(ss._gids) == n_before
+
+
+def test_arbitrary_hashable_labels_roundtrip():
+    """Caller labels never touch the device: strings stream and decode."""
+    stream = [(f"n{u}", f"n{v}", ins) for (u, v, ins) in _stream(seed=51)]
+    ss = ShardedSummarizer(_cfg(), routing="device", n_shards=2,
+                           router_chunk=64).run(stream)
+    truth = ground_truth_edges(stream)
+    assert ss.live_edges() == truth
+    assert ss.materialize().decode_edges() == truth

@@ -1,0 +1,90 @@
+#!/usr/bin/env python3
+"""Markdown link checker: every relative link in tracked *.md must resolve.
+
+Network-free by design (CI runs it on every PR): external http(s)/mailto
+links are skipped; relative links — with optional #fragments — are resolved
+against the file's directory and must point at an existing file or
+directory inside the repo.
+
+Usage: python tools/check_md_links.py [root]   (default: repo root)
+"""
+from __future__ import annotations
+
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+# [text](target) — tolerating one level of nested [] in the text part
+LINK = re.compile(r"\[(?:[^\[\]]|\[[^\]]*\])*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+SKIP_DIRS = {"__pycache__", "node_modules", "venv", "env", "site-packages"}
+
+
+def _skipped(parts) -> bool:
+    # hidden dirs (.git, .venv, .tox, ...) and third-party trees
+    return any(p in SKIP_DIRS or p.startswith(".") for p in parts)
+
+
+def iter_md(root: Path):
+    """Tracked *.md when root is a git checkout; filtered rglob otherwise."""
+    try:
+        out = subprocess.run(
+            ["git", "-C", str(root), "ls-files", "--", "*.md"],
+            capture_output=True, text=True, timeout=30)
+        if out.returncode == 0:
+            for rel in sorted(out.stdout.splitlines()):
+                p = root / rel
+                if rel and p.exists():   # staged deletions
+                    yield p
+            return
+    except (OSError, subprocess.TimeoutExpired):
+        pass
+    for p in sorted(root.rglob("*.md")):
+        if not _skipped(p.relative_to(root).parent.parts):
+            yield p
+
+
+def check(root: Path, counter: list | None = None) -> list[str]:
+    errors = []
+    for md in iter_md(root):
+        if counter is not None:
+            counter.append(md)
+        text = md.read_text(encoding="utf-8")
+        # code routinely contains pseudo-links; drop fenced blocks and
+        # inline spans before matching
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        text = re.sub(r"`[^`\n]*`", "", text)
+        for m in LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            try:
+                resolved.relative_to(root.resolve())
+            except ValueError:
+                errors.append(f"{md.relative_to(root)}: link escapes repo: "
+                              f"{target}")
+                continue
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(root)}: broken link: "
+                              f"{target}")
+    return errors
+
+
+def main() -> int:
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else \
+        Path(__file__).resolve().parent.parent
+    seen: list = []
+    errors = check(root, counter=seen)
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(seen)} markdown files: "
+          f"{'OK' if not errors else f'{len(errors)} broken links'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
