@@ -158,35 +158,52 @@ def engine_throughput() -> List[Row]:
 
 def router_throughput(n_nodes: int = 700, deg: int = 4, n_shards: int = 2,
                       chunk: int = 512) -> List[Row]:
-    """Beyond-paper: sharded stream throughput, host vs device routing.
+    """Beyond-paper: sharded stream throughput across routing/sync modes.
 
-    Both modes run the same shards over the same FD stream with the same
-    chunk boundaries (so their engines are in lockstep — equal phi is part
-    of the measurement's sanity check); the delta is pure routing cost:
-    host Python bucketing + one dispatch per round vs one fused
-    shard-keys + all_to_all + rounds device program per chunk.
+    Three configurations run the same shards over the same FD stream with
+    the same chunk boundaries (so their engines are in lockstep — equal phi
+    is part of the measurement's sanity check):
+
+    * ``device`` — the default sync-free router: delivery statically
+      guaranteed by the drain budget, zero per-chunk host fetches.
+    * ``device-synced`` — the same program with ``chunk_sync=True``, i.e.
+      the PR-2 behavior of fetching the overflow watermark every chunk;
+      the delta against ``device`` is the pure sync-elision win.
+    * ``host`` — Python bucketing per change, the differential reference.
     """
     rows: List[Row] = []
     stream = _stream(n_nodes, deg, seed=9)
     cfg = EngineConfig(n_cap=2048, m_cap=1 << 14, d_cap=64, sn_cap=48,
                        c=16, batch=64, escape=0.2)
+    modes = (("device", dict(routing="device")),
+             ("device-synced", dict(routing="device", chunk_sync=True)),
+             ("host", dict(routing="host")))
     us, phis, overflows = {}, {}, {}
-    for routing in ("device", "host"):
-        ss = ShardedSummarizer(cfg, n_shards=n_shards, routing=routing,
-                               router_chunk=chunk)
+    for name, kw in modes:
+        ss = ShardedSummarizer(cfg, n_shards=n_shards, router_chunk=chunk,
+                               **kw)
+        if name == "device":
+            assert ss.sync_free, "default geometry must elide the sync"
+        if name == "device-synced":
+            assert not ss.sync_free
         ss.process(stream[:chunk])           # compile outside the clock
         t0 = time.time()
         ss.process(stream[chunk:])
         _ = ss.phi                           # sync before stopping the clock
-        us[routing] = 1e6 * (time.time() - t0) / max(len(stream) - chunk, 1)
-        phis[routing] = ss.phi
-        rows.append((f"router/{routing}", us[routing],
+        us[name] = 1e6 * (time.time() - t0) / max(len(stream) - chunk, 1)
+        phis[name] = ss.phi
+        overflows[name] = ss.router_overflows
+        rows.append((f"router/{name}", us[name],
                      f"phi={ss.phi} shards={n_shards} "
-                     f"overflows={ss.router_overflows}"))
-        overflows[routing] = ss.router_overflows
-    # lockstep sanity: only guaranteed when the DEVICE run saw no lane
-    # overflow (an overflow legitimately changes its PRNG schedule)
-    assert overflows["device"] or phis["device"] == phis["host"], phis
+                     f"overflows={ss.router_overflows} "
+                     f"drain_rounds={ss.stats()['router_drain_rounds']} "
+                     f"syncs={ss.router_syncs}"))
+    # lockstep sanity: only guaranteed when no host fallback ran (a
+    # fallback legitimately changes the PRNG schedule)
+    assert overflows["device-synced"] or len(set(phis.values())) == 1, phis
+    rows.append(("router/sync_elision", us["device"],
+                 f"synced_over_elided="
+                 f"{us['device-synced']/max(us['device'],1e-9):.2f}x"))
     rows.append(("router/speedup", us["device"],
                  f"host_over_device={us['host']/max(us['device'],1e-9):.2f}x"))
     return rows

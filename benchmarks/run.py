@@ -4,7 +4,11 @@
 #   python benchmarks/run.py --only router    # name-filtered subset
 #   python benchmarks/run.py --smoke          # tiny CI config: router path
 #                                             # (host + device) end to end
+#   python benchmarks/run.py --smoke --json BENCH_router.json
+#                                             # also write rows as JSON (CI
+#                                             # records the perf trajectory)
 import argparse
+import json
 import sys
 from pathlib import Path
 
@@ -20,6 +24,9 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="run only benchmarks whose function name contains "
                          "this substring")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="additionally write the rows as a JSON array "
+                         "(PR-over-PR perf tracking artifact)")
     args = ap.parse_args()
 
     from benchmarks import paper_benchmarks as pb
@@ -28,11 +35,16 @@ def main() -> None:
         if args.only is None or args.only in fn.__name__]
     if not fns:
         sys.exit(f"no benchmark matches --only {args.only!r}")
+    rows = []
     print("name,us_per_call,derived")
     for fn in fns:
         for (name, us, derived) in fn():
+            rows.append({"name": name, "us_per_call": round(us, 1),
+                         "derived": derived})
             print(f"{name},{us:.1f},{derived}")
             sys.stdout.flush()
+    if args.json:
+        Path(args.json).write_text(json.dumps(rows, indent=2) + "\n")
 
 
 if __name__ == '__main__':

@@ -258,16 +258,29 @@ class ShardedSummarizer:
     **Routing modes** (``routing=``):
 
     * ``"device"`` (default) — changes stream through the jit-compiled
-      router: shard keys, a capacity-bounded ``all_to_all`` exchange, and
-      the engine rounds all run in one fused device program per chunk of
-      ``router_chunk`` changes.  Each chunk synchronizes on one scalar (the
-      router's overflow watermark).  When a (source, shard) lane exceeds
-      ``lane_cap``, the un-routed stream suffix falls back to the host path
-      below and ``router_overflows`` counts the spilled changes.
+      router: shard keys, a capacity-bounded ``all_to_all`` exchange (run
+      as a bounded on-device drain loop when a (source, shard) lane
+      exceeds ``lane_cap``), and the engine rounds all run in one fused
+      device program per chunk of ``router_chunk`` changes.  With the
+      default ``max_drain_rounds`` delivery of a full chunk is statically
+      guaranteed, so dispatch is **sync-free**: no per-chunk host fetch,
+      and the host stages chunk k+1 while chunk k computes.  Only an
+      explicitly lowered ``max_drain_rounds`` (or ``chunk_sync=True``)
+      reinstates the per-chunk watermark fetch; a suffix left undelivered
+      when the round budget runs out falls back to the host path below and
+      ``router_overflows`` counts the spilled changes.
     * ``"host"`` — the differential reference: the host buckets gids per
       shard and feeds padded ``[n_shards, batch]`` rounds.  Given identical
-      ``process`` call boundaries (calls no longer than ``router_chunk``)
-      and no overflow, both modes produce bit-identical engine states.
+      ``process`` call boundaries (calls no longer than ``router_chunk``),
+      both modes produce bit-identical engine states — including through
+      multi-round drains — as long as no host fallback ran (the fallback
+      legitimately shifts the PRNG schedule).
+
+    **Routing telemetry.** ``router_syncs`` counts per-chunk watermark
+    fetches (0 when ``sync_free``), ``router_overflows`` counts changes
+    replayed through the host path, and ``stats()['router_drain_rounds']``
+    counts extra drain rounds beyond the first (device-resident counter,
+    fetched only at sync points).
 
     **Capacity semantics.** Edge partitioning is a vertex cut: a node
     touching edges in several partitions occupies a local id in each, so
@@ -284,7 +297,11 @@ class ShardedSummarizer:
                  mesh=None, n_shards: Optional[int] = None,
                  routing: str = "device", router_chunk: int = 1024,
                  lane_cap: Optional[int] = None,
+                 max_drain_rounds: Optional[int] = None,
+                 chunk_sync: bool = False,
                  **overrides) -> None:
+        import math
+
         import jax
         import jax.numpy as jnp
 
@@ -297,7 +314,13 @@ class ShardedSummarizer:
         self.cfg = cfg
         if mesh is None:
             from repro.launch.mesh import make_engine_mesh
-            mesh = make_engine_mesh()
+            if n_shards is None:
+                mesh = make_engine_mesh()
+            else:
+                # fit the mesh to the shard count: n_shards replicas spread
+                # over the largest local device subset that divides them
+                mesh = make_engine_mesh(
+                    math.gcd(int(n_shards), len(jax.devices())))
         self.mesh = mesh
         n_dev = int(mesh.devices.size)
         self.n_shards = n_dev if n_shards is None else int(n_shards)
@@ -315,10 +338,25 @@ class ShardedSummarizer:
             if lane_cap is None
             else min(int(lane_cap), self.router_chunk // n_dev))
         self.router_overflows = 0   # changes spilled to the host path
+        self.router_syncs = 0       # per-chunk watermark fetches performed
+        self.chunk_sync = bool(chunk_sync)
+        self._drain_rounds = 0      # folded drain counter (device scalar)
+        self._drain_parts: List = []  # unfolded per-chunk round counts
         self._bucketed = dist_router.make_bucketed_step(cfg, mesh)
-        self._routed = (dist_router.make_routed_step(
-            cfg, mesh, self.n_shards, self.router_chunk, self.lane_cap)
-            if routing == "device" else None)
+        if routing == "device":
+            self._routed, self.router_geometry = dist_router.make_routed_step(
+                cfg, mesh, self.n_shards, self.router_chunk, self.lane_cap,
+                max_drain_rounds)
+            self.lane_cap = self.router_geometry.lane_cap
+            self.max_drain_rounds = self.router_geometry.max_drain_rounds
+            # delivery statically guaranteed -> the overflow watermark never
+            # gates anything and dispatch needs no per-chunk host round-trip
+            self.sync_free = (self.router_geometry.drain_guaranteed
+                              and not self.chunk_sync)
+        else:
+            self._routed, self.router_geometry = None, None
+            self.max_drain_rounds = None
+            self.sync_free = False
 
         state1 = new_state(cfg)
         n = self.n_shards
@@ -399,22 +437,52 @@ class ShardedSummarizer:
         self._host_cache = None
 
     def _process_chunk_device(self, chunk: Sequence[Change]) -> None:
-        """Device routing: one fused router dispatch per chunk; the suffix
-        from the first lane overflow (if any) replays via the host path so
-        stream order — and therefore losslessness — is preserved."""
+        """Device routing: one fused router dispatch per chunk; lane
+        overflow drains through additional on-device exchange rounds.
+
+        In the default (``sync_free``) configuration this method performs
+        ZERO device-to-host transfers: the dispatch returns immediately
+        (jax async dispatch) and the host stages the next chunk while this
+        one computes — the drain-round telemetry accumulates as a lazy
+        device scalar fetched only at sync points.  Only when the drain
+        budget is explicitly bounded (``max_drain_rounds`` below the
+        delivery guarantee) or ``chunk_sync=True`` does the watermark get
+        fetched per chunk, gating the host-path replay of an undelivered
+        suffix so stream order — and therefore losslessness — is
+        preserved."""
         c = self.router_chunk
         gu = np.full((c,), -1, np.int32)
         gv = np.full((c,), -1, np.int32)
         fl = np.zeros((c,), np.int32)
         for i, (u, v, ins) in enumerate(chunk):
             gu[i], gv[i], fl[i] = self._gid(u), self._gid(v), ins
-        self.state, self.intern, first = self._routed(
+        self.state, self.intern, delivered, rounds = self._routed(
             self.state, self.intern, gu, gv, fl)
         self._host_cache = None
-        i0 = int(np.asarray(first).min())    # per-chunk sync (fallback gate)
+        # drain telemetry: a list append per chunk (no device dispatch on
+        # the sync-free hot path); folded device-side every 64 chunks
+        self._drain_parts.append(rounds)
+        if len(self._drain_parts) >= 64:
+            self._fold_drain_rounds()
+        if self.sync_free:
+            return                           # statically fully delivered
+        self.router_syncs += 1
+        i0 = int(np.asarray(delivered).min())  # per-chunk sync (fallback gate)
         if i0 < len(chunk):
             self.router_overflows += len(chunk) - i0
             self._process_chunk_host(chunk[i0:])
+
+    def _fold_drain_rounds(self) -> None:
+        """Fold the buffered per-chunk drain-round counts into the running
+        device scalar.  Device-side only — never fetches — so calling it
+        from the dispatch path preserves the sync-free contract."""
+        if not self._drain_parts:
+            return
+        import jax.numpy as jnp
+        stack = jnp.stack(self._drain_parts)   # [chunks, n_dev]
+        self._drain_rounds = (self._drain_rounds
+                              + jnp.sum(jnp.max(stack, axis=1) - 1))
+        self._drain_parts.clear()
 
     def run(self, stream: Iterable[Change]) -> "ShardedSummarizer":
         self.process(list(stream))
@@ -488,20 +556,28 @@ class ShardedSummarizer:
     def stats(self) -> dict:
         """Aggregate engine counters plus routing telemetry:
         ``router_overflows`` counts changes that spilled from the device
-        router's capacity-bounded lanes back to the host path (always 0 in
-        ``routing="host"`` mode).  One device transfer (counters only)."""
+        router back to the host path (only possible with an explicitly
+        bounded ``max_drain_rounds``; always 0 in ``routing="host"`` mode),
+        ``router_drain_rounds`` counts extra on-device exchange rounds
+        beyond the first (key-skew indicator), and ``router_syncs`` counts
+        per-chunk watermark fetches (0 when ``sync_free``).  One device
+        transfer (counters only) — this is a sync point."""
         import jax
+        self._fold_drain_rounds()
         s = self.state
-        phi, ne, tr, ac, sk, dr = jax.device_get(
+        phi, ne, tr, ac, sk, dr, drr = jax.device_get(
             (s.phi, s.num_edges, s.n_trials, s.n_accept, s.n_skipped,
-             self.intern.n_dropped))
+             self.intern.n_dropped, self._drain_rounds))
         self._raise_if_dropped(int(np.sum(dr)))
         tot = lambda x: int(np.sum(x))  # noqa: E731
         return dict(phi=tot(phi), num_edges=tot(ne),
                     trials=tot(tr), accepted=tot(ac),
                     skipped=tot(sk), n_shards=self.n_shards,
                     routing=self.routing,
-                    router_overflows=self.router_overflows)
+                    router_overflows=self.router_overflows,
+                    router_drain_rounds=tot(drr),
+                    router_syncs=self.router_syncs,
+                    router_sync_free=self.sync_free)
 
     # ------------------------------------------------------------ materialize
     def live_edges(self) -> Set[Tuple[object, object]]:

@@ -18,20 +18,33 @@ router moves the partition-and-exchange onto the devices:
    compacts the lanes source-major, which reconstructs global stream order
    (source slices are contiguous in the stream and ranks preserve order
    within a lane).
-4. Each shard interns the received gids into its dense local id space
+4. If some lane overflowed, steps 2-3 repeat as a bounded on-device
+   **drain loop** (``lax.while_loop``): each round routes the pending
+   stream prefix up to the first still-overflowing position (agreed with
+   ``lax.pmin``) and appends the deliveries to the per-shard buckets, so
+   multi-round delivery is lossless and order-preserving without any host
+   round-trip.
+5. Each shard interns the received gids into its dense local id space
    (:class:`InternState`, first-come-first-served — the same order host
    bucketing would produce) and runs ``ceil(max_count / batch)`` engine
    rounds, the round count agreed across shards with ``lax.pmax`` so every
    replica advances its PRNG stream identically.
 
-**Overflow contract.** A lane holds at most ``lane_cap`` changes per routed
-chunk.  Rather than dropping or reordering on overflow, the router computes
-the first overflowing *stream position* (``lax.pmin`` across devices), routes
-only the prefix before it, and reports that position; the caller then feeds
-the suffix through the host-routed path (:func:`make_bucketed_step`), which
-shares the device-side intern state, so losslessness and stream order are
-preserved — only the PRNG schedule differs from the no-overflow trajectory.
-Overflowed changes are counted in ``ShardedSummarizer.router_overflows``.
+**Overflow contract.** A lane holds at most ``lane_cap`` changes per drain
+round.  Rather than dropping or reordering on overflow, each round routes
+only the pending stream prefix before the first overflowing *position*
+(``lax.pmin`` across devices) and the next round re-ranks the remainder —
+per round at least ``lane_cap`` changes are delivered, so
+``ceil(chunk / lane_cap)`` rounds always drain a full chunk
+(:func:`router_geometry` computes this bound as ``full_drain_rounds``).
+With the default ``max_drain_rounds`` (the full bound) delivery is
+statically guaranteed and the caller never has to look at the watermark;
+only an explicitly lowered ``max_drain_rounds`` can leave a suffix, which
+the caller then feeds through the host-routed path
+(:func:`make_bucketed_step`, shared intern state, counted in
+``ShardedSummarizer.router_overflows``) — losslessness and stream order
+are preserved either way; only the PRNG schedule differs from the
+no-overflow trajectory when the host path runs.
 
 **Why both paths intern on device.** Trial randomness depends on local node
 ids (they seed the min-hash clustering), so host- and device-routed runs are
@@ -43,11 +56,13 @@ makes the host path a true differential reference for the router.
 SPMD hazard audit (docs/KNOWN_ISSUES.md): all gather/scatter here happens
 *inside* ``shard_map`` on per-device local arrays, so the GSPMD
 concat-of-aligned-slices pattern that miscompiled ``apply_rope`` cannot
-arise — the partitioner never sees these concatenations.
+arise — the partitioner never sees these concatenations.  The drain loop
+adds no new exposure: every round's scatter/exchange/append runs on the
+same per-device locals inside the ``lax.while_loop`` body.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -152,12 +167,34 @@ def _state_specs(cfg: EngineConfig, axis: str):
             jax.tree.map(lambda _: P(axis), ist_sds))
 
 
+def _donate_argnums() -> tuple:
+    """Donate the engine/intern buffers where the backend supports it.
+
+    Donation lets XLA update the (large) stacked engine states in place, so
+    the host can stage chunk k+1 while chunk k computes without doubling
+    device memory.  The CPU backend ignores donation (and warns), so gate
+    on the backend instead of spamming every jit call site.
+    """
+    return () if jax.default_backend() == "cpu" else (0, 1)
+
+
+# compiled-step memo: ShardedSummarizer constructions with identical
+# geometry share one compiled program (EngineConfig is a frozen dataclass
+# and Mesh hashes by device assignment, so the key captures everything
+# that affects compilation).  Without this, every summarizer pair in a
+# differential test recompiles the full shard_map from scratch.
+_STEP_CACHE: dict = {}
+
+
 def make_bucketed_step(cfg: EngineConfig, mesh):
     """jit(shard_map) step consuming host-bucketed ``[n_shards, batch]`` gid
     rounds.  Bucketing/packing happens on the host; interning and the engine
     step run on device (``lax.map`` lays multiple shard replicas per device,
     keeping the engine's control flow intact instead of paying vmap's
-    both-branches cost)."""
+    both-branches cost).  Memoized on ``(cfg, mesh)``."""
+    key = ("bucketed", cfg, mesh)
+    if key in _STEP_CACHE:
+        return _STEP_CACHE[key]
     axis = mesh.axis_names[0]
     est_specs, ist_specs = _state_specs(cfg, axis)
 
@@ -169,35 +206,100 @@ def make_bucketed_step(cfg: EngineConfig, mesh):
     def local(est, ist, gu, gv, ins):
         return jax.lax.map(one, (est, ist, gu, gv, ins))
 
-    return jax.jit(shard_map(
+    fn = jax.jit(shard_map(
         local, mesh=mesh,
         in_specs=(est_specs, ist_specs, P(axis), P(axis), P(axis)),
-        out_specs=(est_specs, ist_specs), check_rep=False))
+        out_specs=(est_specs, ist_specs), check_rep=False),
+        donate_argnums=_donate_argnums())
+    _STEP_CACHE[key] = fn
+    return fn
 
 
 # --------------------------------------------------------------------------- #
-# device-routed step — shard keys, all_to_all exchange, engine rounds
+# device-routed step — shard keys, all_to_all drain rounds, engine rounds
 # --------------------------------------------------------------------------- #
+
+
+class RouterGeometry(NamedTuple):
+    """Resolved static geometry of one compiled router program.
+
+    ``static_no_overflow`` proves a single exchange round always suffices
+    (``lane_cap == n_in``: a lane can never receive more than its source
+    slice), in which case the compiled program carries no overflow watermark
+    at all.  ``drain_guaranteed`` is the weaker — and default — proof that
+    ``max_drain_rounds`` rounds always deliver the whole chunk (each
+    non-final round delivers at least ``lane_cap`` changes, so
+    ``full_drain_rounds = ceil(chunk / lane_cap)`` is a delivery
+    guarantee); when it holds the caller never needs to inspect the
+    watermark, which is what lets ``ShardedSummarizer`` elide the per-chunk
+    host sync.
+    """
+
+    n_dev: int                 # mesh devices
+    n_loc: int                 # shard replicas per device
+    n_in: int                  # stream positions per source device
+    lane_cap: int              # slots per (source, shard) lane per round
+    max_drain_rounds: int      # compiled bound on exchange rounds
+    full_drain_rounds: int     # rounds that provably deliver a full chunk
+    acc_cap: int               # per-shard receive-bucket capacity
+    static_no_overflow: bool   # lane_cap == n_in: one round, no watermark
+    drain_guaranteed: bool     # max_drain_rounds >= full_drain_rounds
+
+
+def router_geometry(mesh, n_shards: int, chunk: int, lane_cap: int,
+                    max_drain_rounds: Optional[int] = None) -> RouterGeometry:
+    """Resolve the router's static knobs for a fixed (mesh, chunk) geometry."""
+    n_dev = int(mesh.devices.size)
+    if chunk % n_dev != 0:
+        raise ValueError(f"chunk={chunk} must be divisible by n_dev={n_dev}")
+    if n_shards % n_dev != 0:
+        raise ValueError(
+            f"n_shards={n_shards} must be a multiple of n_dev={n_dev}")
+    n_loc = n_shards // n_dev
+    n_in = chunk // n_dev            # stream positions per source device
+    lane_cap = min(int(lane_cap), n_in)  # a lane can't exceed its source slice
+    if lane_cap < 1:
+        raise ValueError(f"lane_cap must be >= 1, got {lane_cap}")
+    static_no_overflow = lane_cap == n_in
+    # each non-final drain round delivers >= lane_cap changes (the blocking
+    # lane sends a full lane), so this many rounds always drain the chunk
+    full_drain = 1 if static_no_overflow else -(-chunk // lane_cap)
+    if max_drain_rounds is None:
+        max_drain_rounds = full_drain
+    max_drain_rounds = max(1, min(int(max_drain_rounds), full_drain))
+    r_cap = n_dev * lane_cap         # max deliverable per shard per round
+    acc_cap = min(chunk, max_drain_rounds * r_cap)
+    return RouterGeometry(
+        n_dev=n_dev, n_loc=n_loc, n_in=n_in, lane_cap=lane_cap,
+        max_drain_rounds=max_drain_rounds, full_drain_rounds=full_drain,
+        acc_cap=acc_cap, static_no_overflow=static_no_overflow,
+        drain_guaranteed=max_drain_rounds >= full_drain)
 
 
 def make_routed_step(cfg: EngineConfig, mesh, n_shards: int, chunk: int,
-                     lane_cap: int):
+                     lane_cap: int,
+                     max_drain_rounds: Optional[int] = None):
     """Compile the device-resident router for a fixed geometry.
 
-    Returns a jitted ``(est, ist, gu, gv, ins) -> (est, ist, first)`` where
-    the inputs are the stacked per-shard states plus flat ``[chunk]``
-    gid-encoded change arrays (``-1`` padded) and ``first`` is, per device,
-    the first stream position NOT routed because its (source, shard) lane
-    overflowed ``lane_cap`` — ``chunk`` when everything was delivered.
+    Returns ``(step, geometry)`` where ``step`` is a jitted
+    ``(est, ist, gu, gv, ins) -> (est, ist, delivered, rounds)``: the inputs
+    are the stacked per-shard states plus flat ``[chunk]`` gid-encoded
+    change arrays (``-1`` padded); ``delivered`` is, per device, the first
+    stream position NOT routed when ``max_drain_rounds`` ran out
+    (``chunk`` when everything was delivered — always, when
+    ``geometry.drain_guaranteed``); ``rounds`` is the number of exchange
+    rounds the drain loop ran (1 = no overflow anywhere).
+
+    Memoized on the full geometry key.
     """
+    key = ("routed", cfg, mesh, n_shards, chunk, lane_cap, max_drain_rounds)
+    if key in _STEP_CACHE:
+        return _STEP_CACHE[key]
     axis = mesh.axis_names[0]
-    n_dev = int(mesh.devices.size)
-    n_loc = n_shards // n_dev
-    if chunk % n_dev != 0:
-        raise ValueError(f"chunk={chunk} must be divisible by n_dev={n_dev}")
-    n_in = chunk // n_dev        # stream positions per source device
-    lane_cap = min(lane_cap, n_in)   # a lane can't exceed its source slice
-    r_cap = n_dev * lane_cap     # max deliverable per shard per chunk
+    geom = router_geometry(mesh, n_shards, chunk, lane_cap, max_drain_rounds)
+    n_dev, n_loc, n_in = geom.n_dev, geom.n_loc, geom.n_in
+    lane_cap, acc_cap = geom.lane_cap, geom.acc_cap
+    r_cap = n_dev * lane_cap
     b = cfg.batch
     est_specs, ist_specs = _state_specs(cfg, axis)
 
@@ -206,47 +308,68 @@ def make_routed_step(cfg: EngineConfig, mesh, n_shards: int, chunk: int,
         me = jax.lax.axis_index(axis)
         valid = (gu >= 0) & (gv >= 0)
         dest = jnp.where(valid, jnp.minimum(gu, gv) % n_shards, n_shards)
-
-        # rank of each change within its (source, dest) lane; order-stable
-        onehot = dest[:, None] == jnp.arange(n_shards, dtype=jnp.int32)[None]
-        cum = jnp.cumsum(onehot.astype(jnp.int32), axis=0)
-        rank = jnp.take_along_axis(
-            cum, jnp.clip(dest, 0, n_shards - 1)[:, None], axis=1)[:, 0] - 1
-
-        # capacity bound: route only the stream prefix before the first
-        # overflowing position so the caller can replay the suffix in order
         pos = me * n_in + jnp.arange(n_in, dtype=jnp.int32)
-        over = valid & (rank >= lane_cap)
-        my_first = jnp.min(jnp.where(over, pos, jnp.int32(chunk)))
-        first = jax.lax.pmin(my_first, axis)
-        keep = valid & (rank < lane_cap) & (pos < first)
-
-        # scatter kept changes into the [n_dev, n_loc, lane_cap] send lanes
-        dd = jnp.where(keep, dest // n_loc, n_dev)   # OOB index -> dropped
-        dl = jnp.where(keep, dest % n_loc, 0)
-        rk = jnp.where(keep, rank, 0)
         payload = jnp.stack([gu, gv, ins.astype(jnp.int32)], axis=-1)
-        send = jnp.full((n_dev, n_loc, lane_cap, 3), -1, jnp.int32)
-        send = send.at[dd, dl, rk].set(payload, mode="drop")
-
-        # exchange: recv[j, l] = source j's lane for my local shard l
-        recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0,
-                                  tiled=True)
-        # source-major flatten per shard == global stream order
-        recv = jnp.swapaxes(recv, 0, 1).reshape(n_loc, r_cap, 3)
-        rgu, rgv, rins = recv[..., 0], recv[..., 1], recv[..., 2]
-
-        # stable compaction of each shard's bucket to the front
-        rvalid = rgu >= 0
-        cpos = jnp.cumsum(rvalid.astype(jnp.int32), axis=1) - 1
-        idx = jnp.where(rvalid, cpos, r_cap)
         rows = jnp.arange(n_loc, dtype=jnp.int32)[:, None]
-        pad_row = jnp.full((n_loc, r_cap), -1, jnp.int32)
-        cgu = pad_row.at[rows, idx].set(rgu, mode="drop")
-        cgv = pad_row.at[rows, idx].set(rgv, mode="drop")
-        cins = jnp.zeros((n_loc, r_cap), jnp.int32).at[rows, idx].set(
-            rins, mode="drop")
-        counts = rvalid.sum(axis=1).astype(jnp.int32)
+        sid = jnp.arange(n_shards, dtype=jnp.int32)[None]
+
+        def drain_round(carry):
+            r, delivered, a_gu, a_gv, a_ins, counts = carry
+            pending = valid & (pos >= delivered)
+
+            # rank of each pending change within its (source, dest) lane;
+            # order-stable (monotone in stream position)
+            onehot = (dest[:, None] == sid) & pending[:, None]
+            cum = jnp.cumsum(onehot.astype(jnp.int32), axis=0)
+            rank = jnp.take_along_axis(
+                cum, jnp.clip(dest, 0, n_shards - 1)[:, None],
+                axis=1)[:, 0] - 1
+
+            # capacity bound: route only the pending stream prefix before
+            # the first overflowing position, so the delivered set is always
+            # a stream prefix and per-shard order survives multi-round drain
+            if geom.static_no_overflow:
+                first = jnp.int32(chunk)   # provably no overflow: no pmin
+            else:
+                over = pending & (rank >= lane_cap)
+                my_first = jnp.min(jnp.where(over, pos, jnp.int32(chunk)))
+                first = jax.lax.pmin(my_first, axis)
+            keep = pending & (rank < lane_cap) & (pos < first)
+
+            # scatter kept changes into the [n_dev, n_loc, lane_cap] lanes
+            dd = jnp.where(keep, dest // n_loc, n_dev)  # OOB index -> drop
+            dl = jnp.where(keep, dest % n_loc, 0)
+            rk = jnp.where(keep, rank, 0)
+            send = jnp.full((n_dev, n_loc, lane_cap, 3), -1, jnp.int32)
+            send = send.at[dd, dl, rk].set(payload, mode="drop")
+
+            # exchange: recv[j, l] = source j's lane for my local shard l
+            recv = jax.lax.all_to_all(send, axis, split_axis=0,
+                                      concat_axis=0, tiled=True)
+            # source-major flatten per shard == global stream order
+            recv = jnp.swapaxes(recv, 0, 1).reshape(n_loc, r_cap, 3)
+            rgu, rgv, rins = recv[..., 0], recv[..., 1], recv[..., 2]
+
+            # stable compaction, appended at each shard's bucket watermark
+            rvalid = rgu >= 0
+            cpos = jnp.cumsum(rvalid.astype(jnp.int32), axis=1) - 1
+            idx = jnp.where(rvalid, counts[:, None] + cpos, acc_cap)
+            a_gu = a_gu.at[rows, idx].set(rgu, mode="drop")
+            a_gv = a_gv.at[rows, idx].set(rgv, mode="drop")
+            a_ins = a_ins.at[rows, idx].set(rins, mode="drop")
+            counts = counts + rvalid.sum(axis=1).astype(jnp.int32)
+            return r + 1, first, a_gu, a_gv, a_ins, counts
+
+        # drain until the whole chunk is delivered or the round budget is
+        # spent; the loop condition is pmin-agreed, hence mesh-uniform
+        init = (jnp.int32(0), jnp.int32(0),
+                jnp.full((n_loc, acc_cap), -1, jnp.int32),
+                jnp.full((n_loc, acc_cap), -1, jnp.int32),
+                jnp.zeros((n_loc, acc_cap), jnp.int32),
+                jnp.zeros((n_loc,), jnp.int32))
+        rounds, delivered, a_gu, a_gv, a_ins, counts = jax.lax.while_loop(
+            lambda c: (c[1] < chunk) & (c[0] < geom.max_drain_rounds),
+            drain_round, init)
 
         # intern each shard's whole bucket up front — the same order host
         # bucketing interns in, so both paths assign identical local ids
@@ -254,7 +377,7 @@ def make_routed_step(cfg: EngineConfig, mesh, n_shards: int, chunk: int,
             ist_l, gu_l, gv_l = args
             return intern_changes(ist_l, gu_l, gv_l, cfg.n_cap)
 
-        ist, u_all, v_all = jax.lax.map(int_one, (ist, cgu, cgv))
+        ist, u_all, v_all = jax.lax.map(int_one, (ist, a_gu, a_gv))
 
         # one spare round of padding so dynamic_slice never clamps
         u_all = jnp.concatenate(
@@ -262,11 +385,11 @@ def make_routed_step(cfg: EngineConfig, mesh, n_shards: int, chunk: int,
         v_all = jnp.concatenate(
             [v_all, jnp.full((n_loc, b), -1, jnp.int32)], axis=1)
         i_all = jnp.concatenate(
-            [cins, jnp.zeros((n_loc, b), jnp.int32)], axis=1)
+            [a_ins, jnp.zeros((n_loc, b), jnp.int32)], axis=1)
 
         # every shard steps the same number of rounds (uniform PRNG advance,
         # matching the host path's ceil(max_bucket / batch) schedule)
-        rounds = jax.lax.pmax(jnp.max((counts + b - 1) // b), axis)
+        erounds = jax.lax.pmax(jnp.max((counts + b - 1) // b), axis)
 
         def round_body(carry):
             r, est = carry
@@ -281,19 +404,24 @@ def make_routed_step(cfg: EngineConfig, mesh, n_shards: int, chunk: int,
             return r + 1, jax.lax.map(one, (est, u_all, v_all, i_all))
 
         _, est = jax.lax.while_loop(
-            lambda c: c[0] < rounds, round_body, (jnp.int32(0), est))
-        return est, ist, first[None]
+            lambda c: c[0] < erounds, round_body, (jnp.int32(0), est))
+        return est, ist, delivered[None], rounds[None]
 
-    return jax.jit(shard_map(
+    fn = jax.jit(shard_map(
         local, mesh=mesh,
         in_specs=(est_specs, ist_specs, P(axis), P(axis), P(axis)),
-        out_specs=(est_specs, ist_specs, P(axis)), check_rep=False))
+        out_specs=(est_specs, ist_specs, P(axis), P(axis)),
+        check_rep=False), donate_argnums=_donate_argnums())
+    _STEP_CACHE[key] = (fn, geom)
+    return fn, geom
 
 
 def default_lane_cap(chunk: int, n_dev: int, n_shards: int,
                      batch: int) -> int:
     """4x-headroom lane size over the balanced expectation, floored at one
     engine batch and capped at the source slice (beyond which a lane cannot
-    fill) — overflows then only occur under heavy key skew."""
+    fill) — with the default drain bound the router then delivers any chunk
+    fully on device, and a key-skewed chunk costs extra drain rounds rather
+    than a host replay."""
     balanced = -(-chunk // (n_dev * n_shards))   # ceil
     return min(max(batch, 4 * balanced), chunk // n_dev)

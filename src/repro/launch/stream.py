@@ -40,6 +40,11 @@ def make_stream(kind: str, nodes: int, edges_per_node: int, beta: float,
 
 
 def main() -> None:
+    # search/batch defaults come FROM EngineConfig, so the CLI, tests, and
+    # benchmarks run the same configuration by construction (drifting
+    # literals here once shipped c=32/escape=0.2/batch=64 against the
+    # engine's 20/0.3/32)
+    dflt = EngineConfig()
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", choices=["reference", "batched", "sharded"],
                     default="reference")
@@ -51,6 +56,14 @@ def main() -> None:
                     help="sharded: changes per routed dispatch")
     ap.add_argument("--lane-cap", type=int, default=None,
                     help="sharded: per (source, shard) router lane capacity")
+    ap.add_argument("--max-drain-rounds", type=int, default=None,
+                    help="sharded: on-device overflow drain round budget "
+                         "(default: enough to guarantee full delivery, "
+                         "which elides the per-chunk watermark sync)")
+    ap.add_argument("--chunk-sync", action="store_true",
+                    help="sharded: force the per-chunk watermark fetch even "
+                         "when delivery is statically guaranteed (measures "
+                         "the sync-elision gap)")
     ap.add_argument("--algo", choices=list(ALGORITHMS), default="mosso")
     ap.add_argument("--graph", choices=["ba", "copying"], default="ba")
     ap.add_argument("--nodes", type=int, default=2000)
@@ -58,9 +71,9 @@ def main() -> None:
     ap.add_argument("--beta", type=float, default=0.7)
     ap.add_argument("--fully-dynamic", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--c", type=int, default=32)
-    ap.add_argument("--escape", type=float, default=0.2)
-    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--c", type=int, default=dflt.c)
+    ap.add_argument("--escape", type=float, default=dflt.escape)
+    ap.add_argument("--batch", type=int, default=dflt.batch)
     args = ap.parse_args()
 
     stream = make_stream(args.graph, args.nodes, args.deg, args.beta,
@@ -94,7 +107,13 @@ def main() -> None:
             EngineConfig(n_cap=n_cap, m_cap=m_cap, c=args.c,
                          escape=args.escape, batch=args.batch),
             n_shards=args.shards, routing=args.routing,
-            router_chunk=args.router_chunk, lane_cap=args.lane_cap)
+            router_chunk=args.router_chunk, lane_cap=args.lane_cap,
+            max_drain_rounds=args.max_drain_rounds,
+            chunk_sync=args.chunk_sync)
+        if args.routing == "device":
+            print(f"router: lane_cap={ss.lane_cap} "
+                  f"max_drain_rounds={ss.max_drain_rounds} "
+                  f"sync_free={ss.sync_free}")
         ss.run(stream)
         phi, m = ss.phi, ss.num_edges
         extra = str(ss.stats())

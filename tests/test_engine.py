@@ -135,3 +135,56 @@ def test_engine_compaction_preserves_state(engine_cfg):
     # and the engine keeps working afterwards
     bs.process([(10_000, 10_001, True)])
     assert bs.num_edges == before[1] + 1
+
+
+# --------------------------------------------------------------------------- #
+# sampling primitives: exact-uniformity fixes (PR 3)
+# --------------------------------------------------------------------------- #
+
+
+def test_rnd_below_is_lemire_multiply_shift():
+    """rnd_below must implement (u64(x) * n) >> 32 exactly — the modulo
+    form it replaced skews neighbor/candidate picks toward small indices."""
+    from repro.core.engine.ops import rnd_below, rnd_u32
+    rng = np.random.default_rng(0)
+    seeds = rng.integers(0, 2**32, size=200, dtype=np.uint32)
+    ctrs = rng.integers(0, 2**32, size=200, dtype=np.uint32)
+    ns = rng.integers(1, 2**31 - 1, size=200, dtype=np.int64)
+    got = jax.vmap(rnd_below)(jnp.asarray(seeds), jnp.asarray(ctrs),
+                              jnp.asarray(ns.astype(np.int32)))
+    draws = jax.vmap(rnd_u32)(jnp.asarray(seeds), jnp.asarray(ctrs))
+    want = (np.asarray(draws).astype(np.uint64) * ns.astype(np.uint64)) >> 32
+    np.testing.assert_array_equal(np.asarray(got).astype(np.uint64), want)
+    assert (np.asarray(got) >= 0).all() and (np.asarray(got) < ns).all()
+
+
+def test_rnd_below_uniform_over_small_range():
+    """Empirical uniformity for a non-power-of-2 n (the modulo-bias case)."""
+    from repro.core.engine.ops import rnd_below
+    n, m = 7, 70_000
+    got = np.asarray(jax.vmap(
+        lambda c: rnd_below(jnp.uint32(12345), c, jnp.int32(n)))(
+            jnp.arange(m, dtype=jnp.uint32)))
+    counts = np.bincount(got, minlength=n)
+    expected = m / n
+    # 5-sigma band around a binomial count
+    sigma = (expected * (1 - 1 / n)) ** 0.5
+    assert (np.abs(counts - expected) < 5 * sigma).all(), counts
+
+
+def test_rnd_below_empty_range_guard():
+    from repro.core.engine.ops import rnd_below
+    assert int(rnd_below(jnp.uint32(1), jnp.uint32(2), jnp.int32(0))) == 0
+
+
+def test_mixhash_uses_full_31_bit_space():
+    """The 0x7FFFFFFE mask cleared the low bit (halving the cluster-id
+    space, doubling spurious CP(y) collisions); the fix keeps odd ids and
+    only remaps the single NO_CLUSTER collision."""
+    from repro.core.engine.ops import mixhash
+    from repro.core.engine.state import NO_CLUSTER
+    h = np.asarray(mixhash(jnp.arange(4096, dtype=jnp.int32)))
+    assert (h >= 0).all()
+    assert (h != int(NO_CLUSTER)).all()        # sentinel never produced
+    odd = int((h & 1).sum())
+    assert 0.4 < odd / len(h) < 0.6, odd       # low bit carries entropy again
