@@ -1,10 +1,18 @@
-"""End-to-end driver: batched-engine summarization of a large stream with
-fault-tolerant checkpointing (the paper's workload, production shape).
+"""End-to-end driver: sharded, device-routed summarization of a large
+stream with fault-tolerant checkpointing (the paper's workload, production
+shape).
 
-Feeds a ~50k-change fully dynamic stream through the jitted Tier-B engine,
-reports the any-time compression ratio as the graph evolves, checkpoints
-engine state mid-stream, simulates a crash, restores, and verifies the
-restored run ends at the identical state.
+Feeds a fully dynamic stream through ``ShardedSummarizer`` on the default
+``routing="device"`` path — the two-stage pipelined router that hashes
+labels on the host (no per-change dict work), routes and interns on
+device, and overlaps chunk k+1's routing with chunk k's engine rounds —
+then reports the any-time compression ratio, certifies the sync-free
+dispatch telemetry, checkpoints the device state mid-stream, simulates a
+crash, restores, and verifies the restored run ends at the identical
+state.
+
+This example is CI-smoked (`.github/workflows/ci.yml`), so it cannot
+drift from the real API.
 
 Run:  PYTHONPATH=src python examples/summarize_stream.py [n_nodes]
 """
@@ -14,54 +22,70 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-import jax
-import numpy as np
-
 from repro.checkpoint import checkpointer
-from repro.core.engine import BatchedSummarizer, EngineConfig
+from repro.core.engine import EngineConfig, ShardedSummarizer
 from repro.graph.streams import (barabasi_albert_edges,
                                  edges_to_fully_dynamic_stream)
 
-n_nodes = int(sys.argv[1]) if len(sys.argv) > 1 else 3000
+n_nodes = int(sys.argv[1]) if len(sys.argv) > 1 else 2000
 edges = barabasi_albert_edges(n_nodes, 4, seed=0)
 stream = edges_to_fully_dynamic_stream(edges, delete_prob=0.1, seed=1)
 print(f"stream: {len(stream)} changes over {n_nodes} nodes")
 
+# per-shard caps budget the vertex-cut replication factor, not |V|/n_shards
+# (src/repro/dist/README.md)
 cfg = EngineConfig(n_cap=1 << max(8, (2 * n_nodes).bit_length()),
                    m_cap=1 << max(10, (2 * len(stream)).bit_length()),
                    d_cap=64, sn_cap=48, c=24, batch=64, escape=0.2)
-bs = BatchedSummarizer(cfg)
+ss = ShardedSummarizer(cfg, n_shards=2, router_chunk=512)
+assert ss.routing == "device" and ss.sync_free and ss.pipeline
+print(f"router: chunk={ss.router_chunk} lane_cap={ss.lane_cap} "
+      f"sync_free={ss.sync_free} pipeline={ss.pipeline}")
 
 ckpt_dir = "/tmp/mosso_stream_ckpt"
-half = len(stream) // 2
+half = (len(stream) // 2 // ss.router_chunk) * ss.router_chunk
 t0 = time.time()
-bs.process(stream[:half])
+ss.process(stream[:half])
 t_half = time.time() - t0
-print(f"[t={half}] ratio={bs.compression_ratio():.3f} phi={bs.phi} "
+print(f"[t={half}] ratio={ss.compression_ratio():.3f} phi={ss.phi} "
       f"({1e6*t_half/half:.0f} us/change incl. compile)")
 
-# --- fault tolerance: checkpoint, 'crash', restore, continue -------------
-checkpointer.save(ckpt_dir, half, bs.state._asdict(),
-                  extra={"stream_cursor": half})
-print(f"checkpointed engine state at change {half}")
+# steady-state dispatch stayed sync-free and dict-free
+st = ss.stats()
+assert st["router_syncs"] == 0 and st["router_host_dict_ops"] == 0, st
+print(f"dispatch telemetry: syncs={st['router_syncs']} "
+      f"host_dict_ops={st['router_host_dict_ops']} "
+      f"drain_rounds={st['router_drain_rounds']}")
 
-bs2 = BatchedSummarizer(cfg)                     # fresh process after crash
-restored = checkpointer.restore(ckpt_dir, half, bs2.state._asdict())
-bs2.state = type(bs2.state)(**restored)
-bs2._ids = dict(bs._ids)                          # id map travels in meta
-bs2._rev = list(bs._rev)
-cursor = checkpointer.load_meta(ckpt_dir, half)["extra"]["stream_cursor"]
+# --- fault tolerance: checkpoint, 'crash', restore, continue -------------
+ss.flush()                                   # drain the dispatch pipeline
+checkpointer.save(ckpt_dir, half,
+                  {"est": ss.state._asdict(), "ist": ss.intern._asdict()},
+                  extra={"stream_cursor": half,
+                         "h2label": {str(h): l
+                                     for h, l in ss.host_label_map().items()}})
+print(f"checkpointed sharded engine state at change {half}")
+
+ss2 = ShardedSummarizer(cfg, n_shards=2, router_chunk=512)  # fresh process
+restored = checkpointer.restore(
+    ckpt_dir, half, {"est": ss2.state._asdict(), "ist": ss2.intern._asdict()})
+ss2.state = type(ss2.state)(**restored["est"])
+ss2.intern = type(ss2.intern)(**restored["ist"])
+meta = checkpointer.load_meta(ckpt_dir, half)
+ss2._h2label = {int(h): l for h, l in meta["extra"]["h2label"].items()}
+cursor = meta["extra"]["stream_cursor"]
 
 t0 = time.time()
-bs.process(stream[half:])
-bs2.process(stream[cursor:])
+ss.process(stream[half:])
+ss2.process(stream[cursor:])
+phi1, phi2 = ss.phi, ss2.phi      # sync both runs before stopping the clock
 t_rest = time.time() - t0
-assert bs.phi == bs2.phi, "restored run diverged!"
-print(f"crash-restore verified: both runs end at phi={bs.phi} ✓")
+assert phi1 == phi2, "restored run diverged!"
+print(f"crash-restore verified: both runs end at phi={phi1} ✓")
 
-print(f"[t={len(stream)}] ratio={bs.compression_ratio():.3f} "
-      f"phi={bs.phi} |E|={bs.num_edges}")
-print(f"stats: {bs.stats()}")
+print(f"[t={len(stream)}] ratio={ss.compression_ratio():.3f} "
+      f"phi={ss.phi} |E|={ss.num_edges}")
+print(f"stats: {ss.stats()}")
 print(f"steady-state throughput: "
       f"{(len(stream)-half)/t_rest*2:.0f} changes/s on CPU "
       f"(both runs; TPU is the deployment target)")

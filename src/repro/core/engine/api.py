@@ -238,7 +238,8 @@ class ShardedSummarizer:
     """Edge-partitioned summarization across mesh devices.
 
     Every stream change is routed to the shard owning its canonical pair
-    (``min(gid(u), gid(v)) % n_shards``), so each engine replica sees a
+    (``min(h(u), h(v)) % n_shards`` over the stable 62-bit label hash
+    ``h``, :mod:`repro.dist.labelhash`), so each engine replica sees a
     deterministic, disjoint edge partition and summarizes it losslessly on
     its own ``n_cap``-bounded id space.  Aggregate capacity therefore grows
     linearly with the shard count.  The merged output is the union-of-parts
@@ -249,38 +250,54 @@ class ShardedSummarizer:
 
     * caller labels — any hashable (streaming) / mutually orderable
       (``live_edges``/``materialize``) values;
-    * gids — dense ints assigned by the host in label-encounter order
-      (``_gid``); the routing key is computed on gids;
+    * 62-bit label hashes — a pure stable function of the label
+      (splitmix64 for ints, blake2b-8 otherwise), carried on device as two
+      31-bit words; the routing key is computed on hashes, so placement
+      needs no host dict and no encounter-order state;
     * per-shard local nids — dense ``[0, n_cap)`` ids the engine state is
       indexed by, assigned ON DEVICE in delivery order by the intern tables
       of :mod:`repro.dist.router` (both routing modes assign identically).
 
+    The hash -> label reverse map needed by ``decode``/``materialize``/
+    ``shard_of`` is folded lazily at sync points from a per-chunk label
+    buffer — never on the dispatch path.  A (astronomically unlikely)
+    62-bit hash collision is detected at the fold and raises rather than
+    silently merging two nodes.
+
     **Routing modes** (``routing=``):
 
-    * ``"device"`` (default) — changes stream through the jit-compiled
-      router: shard keys, a capacity-bounded ``all_to_all`` exchange (run
-      as a bounded on-device drain loop when a (source, shard) lane
-      exceeds ``lane_cap``), and the engine rounds all run in one fused
-      device program per chunk of ``router_chunk`` changes.  With the
-      default ``max_drain_rounds`` delivery of a full chunk is statically
-      guaranteed, so dispatch is **sync-free**: no per-chunk host fetch,
-      and the host stages chunk k+1 while chunk k computes.  Only an
-      explicitly lowered ``max_drain_rounds`` (or ``chunk_sync=True``)
-      reinstates the per-chunk watermark fetch; a suffix left undelivered
-      when the round budget runs out falls back to the host path below and
-      ``router_overflows`` counts the spilled changes.
-    * ``"host"`` — the differential reference: the host buckets gids per
-      shard and feeds padded ``[n_shards, batch]`` rounds.  Given identical
+    * ``"device"`` (default) — changes stream through the two-stage
+      jit-compiled router: the **route** stage (shard keys + a
+      capacity-bounded ``all_to_all`` lane exchange, run as a bounded
+      on-device drain loop when a (source, shard) lane exceeds
+      ``lane_cap``) depends only on the chunk, and the **engine** stage
+      (on-device interning + pmax-agreed engine rounds) carries the state.
+      With the default ``max_drain_rounds`` delivery of a full chunk is
+      statically guaranteed, so dispatch is **sync-free**, and the two
+      stages form a software pipeline: chunk k+1 is hashed, packed and
+      routed (drain rounds included) while chunk k runs its engine rounds
+      (``pipeline=False`` forces serial per-chunk dispatch, bit-identical
+      results).  Only an explicitly lowered ``max_drain_rounds`` (or
+      ``chunk_sync=True``) reinstates the per-chunk watermark fetch; a
+      suffix left undelivered when the round budget runs out falls back to
+      the host path below and ``router_overflows`` counts the spilled
+      changes.
+    * ``"host"`` — the differential reference: the host buckets hashed
+      changes per shard (vectorized numpy, stream order preserved) and
+      feeds padded ``[n_shards, batch]`` rounds.  Given identical
       ``process`` call boundaries (calls no longer than ``router_chunk``),
       both modes produce bit-identical engine states — including through
       multi-round drains — as long as no host fallback ran (the fallback
       legitimately shifts the PRNG schedule).
 
     **Routing telemetry.** ``router_syncs`` counts per-chunk watermark
-    fetches (0 when ``sync_free``), ``router_overflows`` counts changes
-    replayed through the host path, and ``stats()['router_drain_rounds']``
-    counts extra drain rounds beyond the first (device-resident counter,
-    fetched only at sync points).
+    fetches (0 when ``sync_free``), ``router_host_dict_ops`` counts
+    label-map mutations performed inside dispatch (0 on the hash-routed
+    steady state — the reverse map folds lazily at sync points),
+    ``router_overflows`` counts changes replayed through the host path,
+    and ``stats()['router_drain_rounds']`` counts extra drain rounds
+    beyond the first (device-resident counter, fetched only at sync
+    points).
 
     **Capacity semantics.** Edge partitioning is a vertex cut: a node
     touching edges in several partitions occupies a local id in each, so
@@ -299,6 +316,7 @@ class ShardedSummarizer:
                  lane_cap: Optional[int] = None,
                  max_drain_rounds: Optional[int] = None,
                  chunk_sync: bool = False,
+                 pipeline: bool = True,
                  **overrides) -> None:
         import math
 
@@ -328,6 +346,11 @@ class ShardedSummarizer:
             raise ValueError(
                 f"n_shards={self.n_shards} must be a multiple of the mesh "
                 f"device count {n_dev}")
+        if self.n_shards >= dist_router.MAX_SHARDS:
+            raise ValueError(
+                f"n_shards={self.n_shards} must be < "
+                f"{dist_router.MAX_SHARDS} (device shard keys compose "
+                f"31-bit hash words over uint32 residues)")
         if routing not in ("device", "host"):
             raise ValueError(f"routing must be 'device' or 'host': {routing}")
         self.routing = routing
@@ -344,9 +367,11 @@ class ShardedSummarizer:
         self._drain_parts: List = []  # unfolded per-chunk round counts
         self._bucketed = dist_router.make_bucketed_step(cfg, mesh)
         if routing == "device":
-            self._routed, self.router_geometry = dist_router.make_routed_step(
-                cfg, mesh, self.n_shards, self.router_chunk, self.lane_cap,
+            self._route, self.router_geometry = dist_router.make_route_step(
+                mesh, self.n_shards, self.router_chunk, self.lane_cap,
                 max_drain_rounds)
+            self._engine = dist_router.make_engine_step(
+                cfg, mesh, self.n_shards, self.router_geometry.acc_cap)
             self.lane_cap = self.router_geometry.lane_cap
             self.max_drain_rounds = self.router_geometry.max_drain_rounds
             # delivery statically guaranteed -> the overflow watermark never
@@ -354,9 +379,15 @@ class ShardedSummarizer:
             self.sync_free = (self.router_geometry.drain_guaranteed
                               and not self.chunk_sync)
         else:
-            self._routed, self.router_geometry = None, None
+            self._route = self._engine = None
+            self.router_geometry = None
             self.max_drain_rounds = None
             self.sync_free = False
+        # the route stage has no state dependencies, so on the sync-free
+        # path chunk k+1's routing is dispatched while chunk k's engine
+        # rounds execute (one routed chunk in flight, flushed at sync)
+        self.pipeline = bool(pipeline) and self.sync_free
+        self._pending = None        # routed buckets awaiting engine dispatch
 
         state1 = new_state(cfg)
         n = self.n_shards
@@ -371,35 +402,164 @@ class ShardedSummarizer:
         self.intern = jax.tree.map(
             lambda l: jnp.broadcast_to(l[None], (n,) + l.shape), ist1)
 
-        self._gids: Dict[object, int] = {}
-        self._labels: List[object] = []     # gid -> caller label
+        self._h2label: Dict[int, object] = {}  # 62-bit hash -> caller label
+        self._label_buf: List = []   # (labels, hi, lo) pending lazy fold
+        self._label_head = None      # compacted (labels, hashes), hash-sorted
+        self._host_dict_ops = 0      # label-map mutations inside dispatch
+        self._in_dispatch = False
         self._host_cache = None
 
     # ------------------------------------------------------------------ ids
-    def _gid(self, label: object) -> int:
-        g = self._gids.get(label)
-        if g is None:
-            g = len(self._gids)
-            self._gids[label] = g
-            self._labels.append(label)
-        return g
+    def _pack_chunk(self, chunk: Sequence[Change], pad_to: int = 0):
+        """Hash one chunk of labeled changes into device words.
+
+        One vectorized numpy pass for integer labels (no per-change Python
+        object work), a pure per-element hash otherwise — either way zero
+        dict mutations; the labels are buffered for the lazy reverse-map
+        fold at the next sync point.
+        """
+        from repro.dist import labelhash
+
+        m = len(chunk)
+        us = [c[0] for c in chunk]
+        vs = [c[1] for c in chunk]
+        uh, ul = labelhash.hash_words(us)
+        vh, vl = labelhash.hash_words(vs)
+        fl = np.fromiter((c[2] for c in chunk), np.int32, m)
+        self._label_buf.append((us, uh, ul))
+        self._label_buf.append((vs, vh, vl))
+        if pad_to > m:
+            def pad(a, fill):
+                return np.concatenate(
+                    [a, np.full(pad_to - m, fill, a.dtype)])
+            uh, ul, vh, vl = (pad(a, -1) for a in (uh, ul, vh, vl))
+            fl = pad(fl, 0)
+        return uh, ul, vh, vl, fl
+
+    @staticmethod
+    def _collision(a, b, h) -> "RuntimeError":
+        return RuntimeError(
+            f"62-bit label-hash collision: {a!r} and {b!r} both hash to "
+            f"{int(h):#x}; rename one label (collision odds are ~n^2/2^63 "
+            f"— this is loud instead of silently merging the two nodes)")
+
+    def _compact_label_buf(self) -> None:
+        """Dedup the pending label buffer by hash — numpy only, no dict.
+
+        Without this a long zero-sync run would buffer every label
+        OCCURRENCE (two per change) until the next fold.  Compaction
+        dedups the un-compacted tail (object-array work proportional to
+        the tail only) and merges it into a hash-sorted compacted head
+        with pure int64 numpy ops, so the buffer is bounded at O(unique
+        labels) and per-cycle Python-object work at O(compaction window).
+        Dropped duplicates are equality-checked against the kept first
+        occurrence (vectorized object compare), so a hash collision still
+        raises loudly here rather than being silently compacted away."""
+        from repro.dist import labelhash
+
+        buf = self._label_buf
+        if not buf:
+            return
+        labels = [x for (ls, _, _) in buf for x in ls]
+        arr = np.array(labels, dtype=object)
+        if arr.ndim != 1:           # e.g. equal-length tuple labels
+            arr = np.empty(len(labels), object)
+            for i, x in enumerate(labels):
+                arr[i] = x
+        comb = np.concatenate([labelhash.combine(hi, lo)
+                               for (_, hi, lo) in buf])
+        uniq, first, inv = np.unique(comb, return_index=True,
+                                     return_inverse=True)
+        same = arr == arr[first[inv]]
+        if not bool(np.all(same)):
+            i = int(np.argmin(same))
+            raise self._collision(arr[int(first[inv[i]])], arr[i], comb[i])
+        keep = arr[first]
+        if self._label_head is None:
+            self._label_head = (keep, uniq)
+        else:
+            h_lab, h_hash = self._label_head
+            pos = np.searchsorted(h_hash, uniq)
+            posc = np.minimum(pos, len(h_hash) - 1)
+            known = (pos < len(h_hash)) & (h_hash[posc] == uniq)
+            if bool(np.any(known)):
+                same2 = keep[known] == h_lab[posc[known]]
+                if not bool(np.all(same2)):
+                    i = int(np.flatnonzero(known)[int(np.argmin(same2))])
+                    raise self._collision(h_lab[int(posc[i])], keep[i],
+                                          uniq[i])
+            fresh = ~known
+            m_hash = np.concatenate([h_hash, uniq[fresh]])
+            order = np.argsort(m_hash)       # disjoint hashes: total order
+            self._label_head = (
+                np.concatenate([h_lab, keep[fresh]])[order], m_hash[order])
+        buf.clear()
+
+    def _fold_labels(self) -> None:
+        """Fold buffered/compacted labels into the hash -> label map.
+
+        Runs at sync points (``materialize``/``shard_of``/``stats``/...),
+        never on the steady-state dispatch path: no dispatch code calls
+        this by construction, and ``router_host_dict_ops`` is the runtime
+        tripwire proving it — any future code path that folds (mutates
+        the label map) while ``process()`` is dispatching gets counted,
+        and the `== 0` assertions in tests/benchmarks/example go red.
+        Raises on a 62-bit hash collision between distinct labels:
+        placement and interning key on the hash, so a collision would
+        silently merge two nodes — loud failure is the contract.
+        """
+        head, buf = self._label_head, self._label_buf
+        if head is None and not buf:
+            return
+        from repro.dist import labelhash
+
+        if self._in_dispatch:
+            self._host_dict_ops += (
+                (len(head[0]) if head is not None else 0)
+                + sum(len(e[0]) for e in buf))
+        h2l = self._h2label
+        entries = ([] if head is None
+                   else [(head[0].tolist(), head[1])])
+        entries += [(labels, labelhash.combine(hi, lo))
+                    for (labels, hi, lo) in buf]
+        for labels, comb in entries:
+            for label, h in zip(labels, comb.tolist()):
+                prev = h2l.setdefault(h, label)
+                if prev is not label and prev != label:
+                    raise self._collision(prev, label, h)
+        self._label_head = None
+        buf.clear()
+
+    def host_label_map(self) -> Dict[int, object]:
+        """The folded 62-bit hash -> caller label map (host side).
+
+        A sync point: drains the dispatch pipeline and folds any buffered
+        chunk labels first, so this plus ``state``/``intern`` really is
+        everything a checkpoint needs to resume decoding.  The returned
+        dict is live state — treat it as read-only."""
+        self._flush_dispatch()
+        self._fold_labels()
+        return self._h2label
 
     def shard_of(self, u: object, v: object) -> int:
         """Deterministic owner shard of a STREAMED edge {u, v}.
 
-        Read-only: raises ``LookupError`` for labels this summarizer has
-        not seen yet.  (Assigning gids here would silently shift every
-        later label's routing — and desynchronize a differential pair of
-        runs — just by *querying* placement.)
+        Placement is a pure function of the label hashes, so the answer
+        never depends on stream order; the method still raises
+        ``LookupError`` for labels this summarizer has not seen, keeping
+        "has this node been streamed" queryable (and typos loud).
+        Read-only: consults the lazily-folded reverse map, assigns
+        nothing.
         """
-        try:
-            gu, gv = self._gids[u], self._gids[v]
-        except KeyError as e:
-            raise LookupError(
-                f"shard_of: label {e.args[0]!r} has not been streamed; "
-                f"gids (and therefore placement) are assigned in stream "
-                f"encounter order") from None
-        return min(gu, gv) % self.n_shards
+        from repro.dist import labelhash
+
+        self._fold_labels()
+        hu, hv = labelhash.hash_label(u), labelhash.hash_label(v)
+        for label, h in ((u, hu), (v, hv)):
+            if h not in self._h2label:
+                raise LookupError(
+                    f"shard_of: label {label!r} has not been streamed")
+        return min(hu, hv) % self.n_shards
 
     # --------------------------------------------------------------- stream
     def process(self, changes: Sequence[Change]) -> None:
@@ -407,63 +567,93 @@ class ShardedSummarizer:
 
         Both routing modes consume the same chunk boundaries, so a host- and
         a device-routed run fed identical calls stay comparable change for
-        change.
+        change.  On the sync-free device path the last chunk's engine stage
+        may still be in flight when this returns (jax async dispatch +
+        the route/engine pipeline); every state accessor flushes first.
         """
         changes = list(changes)
-        for off in range(0, len(changes), self.router_chunk):
-            chunk = changes[off:off + self.router_chunk]
-            if self.routing == "device":
-                self._process_chunk_device(chunk)
-            else:
-                self._process_chunk_host(chunk)
+        self._in_dispatch = True
+        try:
+            for off in range(0, len(changes), self.router_chunk):
+                chunk = changes[off:off + self.router_chunk]
+                if self.routing == "device":
+                    self._process_chunk_device(chunk)
+                else:
+                    self._process_chunk_host(chunk)
+        finally:
+            self._in_dispatch = False
 
     def _process_chunk_host(self, chunk: Sequence[Change]) -> None:
-        """Host routing: bucket gids per shard, feed padded rounds."""
+        """Host routing: bucket hashed changes per shard, feed padded
+        rounds.  Vectorized (stable ``flatnonzero`` order == stream
+        order); shares the packing/hashing path with the device router so
+        the two modes see identical keys."""
+        from repro.dist import labelhash
+
+        self._flush_dispatch()
         n, b = self.n_shards, self.cfg.batch
-        buckets: List[List[Tuple[int, int, bool]]] = [[] for _ in range(n)]
-        for (u, v, ins) in chunk:
-            gu, gv = self._gid(u), self._gid(v)
-            buckets[min(gu, gv) % n].append((gu, gv, ins))
-        rounds = (max((len(q) for q in buckets), default=0) + b - 1) // b
+        uh, ul, vh, vl, fl = self._pack_chunk(chunk)
+        dest = np.minimum(labelhash.combine(uh, ul),
+                          labelhash.combine(vh, vl)) % n
+        idxs = [np.flatnonzero(dest == s) for s in range(n)]
+        rounds = (max((len(i) for i in idxs), default=0) + b - 1) // b
         for r in range(rounds):
-            gu = np.full((n, b), -1, np.int32)
-            gv = np.full((n, b), -1, np.int32)
-            fl = np.zeros((n, b), np.int32)
-            for s in range(n):
-                for j, (a, c, f) in enumerate(buckets[s][r * b:(r + 1) * b]):
-                    gu[s, j], gv[s, j], fl[s, j] = a, c, f
+            buh = np.full((n, b), -1, np.int32)
+            bul = np.full((n, b), -1, np.int32)
+            bvh = np.full((n, b), -1, np.int32)
+            bvl = np.full((n, b), -1, np.int32)
+            bfl = np.zeros((n, b), np.int32)
+            for s, idx in enumerate(idxs):
+                sel = idx[r * b:(r + 1) * b]
+                k = len(sel)
+                if k:
+                    buh[s, :k], bul[s, :k] = uh[sel], ul[sel]
+                    bvh[s, :k], bvl[s, :k] = vh[sel], vl[sel]
+                    bfl[s, :k] = fl[sel]
             self.state, self.intern = self._bucketed(
-                self.state, self.intern, gu, gv, fl)
+                self.state, self.intern, buh, bul, bvh, bvl, bfl)
         self._host_cache = None
+        if len(self._label_buf) >= 128:
+            self._compact_label_buf()
 
     def _process_chunk_device(self, chunk: Sequence[Change]) -> None:
-        """Device routing: one fused router dispatch per chunk; lane
-        overflow drains through additional on-device exchange rounds.
+        """Device routing: route stage + engine stage, software-pipelined.
 
         In the default (``sync_free``) configuration this method performs
-        ZERO device-to-host transfers: the dispatch returns immediately
-        (jax async dispatch) and the host stages the next chunk while this
-        one computes — the drain-round telemetry accumulates as a lazy
-        device scalar fetched only at sync points.  Only when the drain
-        budget is explicitly bounded (``max_drain_rounds`` below the
-        delivery guarantee) or ``chunk_sync=True`` does the watermark get
-        fetched per chunk, gating the host-path replay of an undelivered
-        suffix so stream order — and therefore losslessness — is
-        preserved."""
-        c = self.router_chunk
-        gu = np.full((c,), -1, np.int32)
-        gv = np.full((c,), -1, np.int32)
-        fl = np.zeros((c,), np.int32)
-        for i, (u, v, ins) in enumerate(chunk):
-            gu[i], gv[i], fl[i] = self._gid(u), self._gid(v), ins
-        self.state, self.intern, delivered, rounds = self._routed(
-            self.state, self.intern, gu, gv, fl)
+        ZERO device-to-host transfers and ZERO host dict operations: the
+        chunk is hashed in one vectorized pass, the route dispatch returns
+        immediately (jax async dispatch), and the engine stage for the
+        PREVIOUS chunk is dispatched after it — so chunk k+1's routing
+        (drain rounds included) overlaps chunk k's engine rounds, with the
+        routed buckets as donated double buffers.  Drain-round telemetry
+        accumulates as a lazy device scalar fetched only at sync points.
+        Only when the drain budget is explicitly bounded
+        (``max_drain_rounds`` below the delivery guarantee) or
+        ``chunk_sync=True`` does the watermark get fetched per chunk,
+        gating the host-path replay of an undelivered suffix so stream
+        order — and therefore losslessness — is preserved (serial
+        dispatch: the pipeline needs the delivery guarantee)."""
+        packed = self._pack_chunk(chunk, pad_to=self.router_chunk)
+        *buckets, counts, delivered, rounds = self._route(*packed)
+        routed = (*buckets, counts)
         self._host_cache = None
         # drain telemetry: a list append per chunk (no device dispatch on
-        # the sync-free hot path); folded device-side every 64 chunks
+        # the sync-free hot path); folded device-side every 64 chunks —
+        # and the label buffer compacts to unique hashes on the same
+        # cadence (numpy only: no device fetch, no host dict ops)
         self._drain_parts.append(rounds)
         if len(self._drain_parts) >= 64:
             self._fold_drain_rounds()
+        if len(self._label_buf) >= 128:
+            self._compact_label_buf()
+        if self.pipeline:
+            prev, self._pending = self._pending, routed
+            if prev is not None:
+                self.state, self.intern = self._engine(
+                    self.state, self.intern, *prev)
+            return
+        self.state, self.intern = self._engine(
+            self.state, self.intern, *routed)
         if self.sync_free:
             return                           # statically fully delivered
         self.router_syncs += 1
@@ -471,6 +661,23 @@ class ShardedSummarizer:
         if i0 < len(chunk):
             self.router_overflows += len(chunk) - i0
             self._process_chunk_host(chunk[i0:])
+
+    def _flush_dispatch(self) -> None:
+        """Dispatch the engine stage for a still-pending routed chunk.
+
+        Device-side only — never fetches — so the sync-free contract
+        holds; sync points call this before reading any state."""
+        if self._pending is not None:
+            prev, self._pending = self._pending, None
+            self.state, self.intern = self._engine(
+                self.state, self.intern, *prev)
+
+    def flush(self) -> None:
+        """Public barrier: drain the dispatch pipeline (device-side only).
+
+        After this, ``state``/``intern`` reflect every processed change;
+        useful before checkpointing the raw device state."""
+        self._flush_dispatch()
 
     def _fold_drain_rounds(self) -> None:
         """Fold the buffered per-chunk drain-round counts into the running
@@ -496,10 +703,11 @@ class ShardedSummarizer:
         return self._host_fetch()[0]
 
     def host_interns(self) -> List["object"]:
-        """Per-shard intern states (gid <-> local nid maps) on the host."""
+        """Per-shard intern states (hash <-> local nid maps) on the host."""
         return self._host_fetch()[1]
 
     def _host_fetch(self):
+        self._flush_dispatch()
         if self._host_cache is None:
             import jax
             est, ist = jax.device_get((self.state, self.intern))
@@ -512,6 +720,7 @@ class ShardedSummarizer:
         return self._host_cache
 
     def _check_capacity(self) -> None:
+        self._flush_dispatch()
         if self._host_cache is not None:   # free: counters already fetched
             dropped = sum(int(i.n_dropped) for i in self._host_cache[1])
         else:
@@ -526,10 +735,16 @@ class ShardedSummarizer:
                 f"— losslessness does not hold for the dropped changes)")
 
     def _shard_rev(self, shard: int) -> List[object]:
-        """nid -> caller label for one shard, from the device intern map."""
+        """nid -> caller label for one shard: the device intern table's
+        ``l2h`` rows through the lazily-folded hash -> label map."""
+        from repro.dist import labelhash
+
+        self._fold_labels()
         ist = self.host_interns()[shard]
         n = int(ist.n_nodes)
-        return [self._labels[int(g)] for g in np.asarray(ist.l2g)[:n]]
+        l2h = np.asarray(ist.l2h)[:n]
+        return [self._h2label[int(h)]
+                for h in labelhash.combine(l2h[:, 0], l2h[:, 1])]
 
     def shard_state(self, shard: int) -> EngineState:
         return self.host_states()[shard]
@@ -559,10 +774,14 @@ class ShardedSummarizer:
         router back to the host path (only possible with an explicitly
         bounded ``max_drain_rounds``; always 0 in ``routing="host"`` mode),
         ``router_drain_rounds`` counts extra on-device exchange rounds
-        beyond the first (key-skew indicator), and ``router_syncs`` counts
-        per-chunk watermark fetches (0 when ``sync_free``).  One device
-        transfer (counters only) — this is a sync point."""
+        beyond the first (key-skew indicator), ``router_syncs`` counts
+        per-chunk watermark fetches (0 when ``sync_free``), and
+        ``router_host_dict_ops`` counts label-map mutations inside
+        dispatch (0 on the hash-routed path).  One device transfer
+        (counters only) — this is a sync point."""
         import jax
+        self._flush_dispatch()
+        self._fold_labels()
         self._fold_drain_rounds()
         s = self.state
         phi, ne, tr, ac, sk, dr, drr = jax.device_get(
@@ -577,7 +796,9 @@ class ShardedSummarizer:
                     router_overflows=self.router_overflows,
                     router_drain_rounds=tot(drr),
                     router_syncs=self.router_syncs,
-                    router_sync_free=self.sync_free)
+                    router_host_dict_ops=self._host_dict_ops,
+                    router_sync_free=self.sync_free,
+                    router_pipelined=self.pipeline)
 
     # ------------------------------------------------------------ materialize
     def live_edges(self) -> Set[Tuple[object, object]]:
@@ -594,7 +815,7 @@ class ShardedSummarizer:
         label space, supernode ids offset into disjoint per-shard ranges
         (``shard * n_cap``).  The relabeling reads the device intern maps,
         so it is exact under router-batched delivery: whatever order the
-        all_to_all delivered changes in, ``l2g`` records the resulting nid
+        all_to_all delivered changes in, ``l2h`` records the resulting nid
         assignment."""
         shards = []
         for s, st in enumerate(self.host_states()):

@@ -52,12 +52,29 @@ def _hash(k1: jax.Array, k2: jax.Array, cap: int) -> jax.Array:
     return (h & jnp.uint32(cap - 1)).astype(jnp.int32)
 
 
-def ht_find(ht: HashTable, k1, k2) -> Tuple[jax.Array, jax.Array]:
+def _probe_start(k1: jax.Array, k2: jax.Array, cap: int,
+                 prehashed: bool) -> jax.Array:
+    """First probe slot for a key.
+
+    ``prehashed=True`` skips the fmix re-mix and folds the words directly
+    onto the table — for tables whose keys are already full-entropy hashes
+    (the router's label-intern tables, keyed by 62-bit splitmix64/blake2b
+    words).  A table must be accessed with one consistent setting: the
+    probe sequence IS the on-device layout.
+    """
+    if prehashed:
+        h = (k1.astype(jnp.uint32) ^ k2.astype(jnp.uint32))
+        return (h & jnp.uint32(cap - 1)).astype(jnp.int32)
+    return _hash(k1, k2, cap)
+
+
+def ht_find(ht: HashTable, k1, k2,
+            prehashed: bool = False) -> Tuple[jax.Array, jax.Array]:
     """Return (slot, found). Probes until the key or an EMPTY slot is hit."""
     cap = ht.capacity
     k1 = jnp.asarray(k1, jnp.int32)
     k2 = jnp.asarray(k2, jnp.int32)
-    start = _hash(k1, k2, cap)
+    start = _probe_start(k1, k2, cap, prehashed)
 
     def cond(carry):
         i, _ = carry
@@ -86,10 +103,11 @@ def ht_lookup_batch(ht: HashTable, k1: jax.Array, k2: jax.Array,
     return jax.vmap(lambda a, b: ht_lookup(ht, a, b, default))(k1, k2)
 
 
-def _find_insert_slot(ht: HashTable, k1, k2) -> Tuple[jax.Array, jax.Array]:
+def _find_insert_slot(ht: HashTable, k1, k2,
+                      prehashed: bool = False) -> Tuple[jax.Array, jax.Array]:
     """Slot for an upsert: the key's slot if present, else first free slot."""
     cap = ht.capacity
-    start = _hash(k1, k2, cap)
+    start = _probe_start(k1, k2, cap, prehashed)
 
     # pass 1: find the key or the end of its probe chain (EMPTY).
     def cond1(i):
@@ -112,11 +130,11 @@ def _find_insert_slot(ht: HashTable, k1, k2) -> Tuple[jax.Array, jax.Array]:
     return jnp.where(found, slot1, slot2), found
 
 
-def ht_set(ht: HashTable, k1, k2, v) -> HashTable:
+def ht_set(ht: HashTable, k1, k2, v, prehashed: bool = False) -> HashTable:
     """Upsert key -> v."""
     k1 = jnp.asarray(k1, jnp.int32)
     k2 = jnp.asarray(k2, jnp.int32)
-    slot, _ = _find_insert_slot(ht, k1, k2)
+    slot, _ = _find_insert_slot(ht, k1, k2, prehashed)
     return HashTable(
         k1=ht.k1.at[slot].set(k1),
         k2=ht.k2.at[slot].set(k2),
@@ -170,19 +188,26 @@ def ht_load(ht: HashTable) -> jax.Array:
     return jnp.mean(ht_live_mask(ht).astype(jnp.float32))
 
 
-def ht_rebuild(ht: HashTable) -> HashTable:
+def ht_rebuild(ht: HashTable, prehashed: bool = False) -> HashTable:
     """Host-callable compaction: rehash live entries into a fresh table.
 
     Long fully-dynamic streams accumulate tombstones that stretch probe
     chains; production deployments call this between steps when
     ``ht_load + tombstone fraction`` crosses a threshold.
+
+    ``prehashed`` MUST match how the table is probed (see
+    ``_probe_start``): rebuilding a prehashed table with the default mix
+    would relocate every entry off its probe chain.  (The router's intern
+    tables are prehashed but never tombstone, so they never need this.)
     """
     fresh = ht_new(ht.capacity)
 
     def body(i, t):
         live = ht.k1[i] >= 0
         return jax.lax.cond(
-            live, lambda t: ht_set(t, ht.k1[i], ht.k2[i], ht.val[i]),
+            live,
+            lambda t: ht_set(t, ht.k1[i], ht.k2[i], ht.val[i],
+                             prehashed=prehashed),
             lambda t: t, t)
 
     return jax.lax.fori_loop(0, ht.capacity, body, fresh)

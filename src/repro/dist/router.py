@@ -2,33 +2,48 @@
 
 :class:`~repro.core.engine.api.ShardedSummarizer` partitions the edge stream
 over a fleet of engine replicas by canonical-pair key
-``min(gid(u), gid(v)) % n_shards``.  Until this module existed the routing
-ran on the host — a Python loop bucketing every change — so aggregate
-*capacity* scaled with the shard count while *throughput* did not.  The
-router moves the partition-and-exchange onto the devices:
+``min(h(u), h(v)) % n_shards``, where ``h`` is a stable 62-bit label hash
+(:mod:`repro.dist.labelhash`).  Until PR 4 the key was computed on dense
+gids a host-side Python dict assigned in encounter order — a per-change
+host tax and the last centralized step in dispatch.  The router now
+consumes raw hashed labels and runs the whole dispatch path on device, as
+a two-stage software pipeline:
 
-1. The host hands the router one flat, gid-encoded chunk of changes
-   (``-1``-padded to a fixed ``chunk`` length, split contiguously over the
-   mesh so device ``d`` holds stream positions ``[d*n_in, (d+1)*n_in)``).
-2. Each source device computes the shard key of its changes and scatters
-   them into a capacity-bounded send buffer of ``lane_cap`` slots per
-   (source device, destination shard) lane.
-3. One ``lax.all_to_all`` inside the existing ``shard_map`` region delivers
-   every lane to the device owning its destination shard; the receiver
-   compacts the lanes source-major, which reconstructs global stream order
-   (source slices are contiguous in the stream and ranks preserve order
-   within a lane).
+**Stage 1 — route** (:func:`make_route_step`, no state dependencies):
+
+1. The host hands the router one flat chunk of hashed changes (four
+   ``int32`` hash words + a flag per change, ``-1``-padded to a fixed
+   ``chunk`` length, split contiguously over the mesh so device ``d``
+   holds stream positions ``[d*n_in, (d+1)*n_in)``).
+2. Each source device computes shard keys and scatters its changes into a
+   capacity-bounded send buffer of ``lane_cap`` slots per (source device,
+   destination shard) lane.
+3. One ``lax.all_to_all`` inside the ``shard_map`` region delivers every
+   lane to the device owning its destination shard; the receiver compacts
+   the lanes source-major, which reconstructs global stream order.
 4. If some lane overflowed, steps 2-3 repeat as a bounded on-device
    **drain loop** (``lax.while_loop``): each round routes the pending
    stream prefix up to the first still-overflowing position (agreed with
    ``lax.pmin``) and appends the deliveries to the per-shard buckets, so
    multi-round delivery is lossless and order-preserving without any host
    round-trip.
-5. Each shard interns the received gids into its dense local id space
-   (:class:`InternState`, first-come-first-served — the same order host
-   bucketing would produce) and runs ``ceil(max_count / batch)`` engine
-   rounds, the round count agreed across shards with ``lax.pmax`` so every
-   replica advances its PRNG stream identically.
+
+**Stage 2 — engine** (:func:`make_engine_step`, consumes stage-1 buckets):
+
+5. Each shard interns the received hash words into its dense local id
+   space (:class:`InternState`, first-come-first-served — the same order
+   host bucketing would produce): a vectorized batch pre-lookup resolves
+   already-known nodes in parallel, and a sequential scan probes only for
+   chunk-novel keys, preserving exact assignment order.
+6. The shard runs ``ceil(max_count / batch)`` engine rounds, the round
+   count agreed across shards with ``lax.pmax`` so every replica advances
+   its PRNG stream identically.
+
+Because stage 1 depends only on the chunk (never on engine or intern
+state), ``ShardedSummarizer`` dispatches chunk k+1's routing — drain
+rounds included — while chunk k's engine rounds are still executing: the
+steady state is a two-deep pipeline with zero per-chunk host fetches and
+zero per-chunk host dict operations.
 
 **Overflow contract.** A lane holds at most ``lane_cap`` changes per drain
 round.  Rather than dropping or reordering on overflow, each round routes
@@ -49,16 +64,19 @@ no-overflow trajectory when the host path runs.
 **Why both paths intern on device.** Trial randomness depends on local node
 ids (they seed the min-hash clustering), so host- and device-routed runs are
 bit-identical only if both assign ids in the same per-shard order.  Keeping
-the gid -> local-id map in device memory (a :mod:`~repro.core.engine.hashtable`
-open-addressing table per shard) gives both paths one source of truth and
-makes the host path a true differential reference for the router.
+the hash -> local-id map in device memory (a
+:mod:`~repro.core.engine.hashtable` open-addressing table per shard) gives
+both paths one source of truth and makes the host path a true differential
+reference for the router.
 
 SPMD hazard audit (docs/KNOWN_ISSUES.md): all gather/scatter here happens
 *inside* ``shard_map`` on per-device local arrays, so the GSPMD
 concat-of-aligned-slices pattern that miscompiled ``apply_rope`` cannot
-arise — the partitioner never sees these concatenations.  The drain loop
-adds no new exposure: every round's scatter/exchange/append runs on the
-same per-device locals inside the ``lax.while_loop`` body.
+arise — the partitioner never sees these concatenations.  The two-stage
+split adds no new exposure: the stage boundary passes ``P(axis)``-sharded
+bucket arrays between two ``shard_map`` regions without host contact, and
+every drain round's scatter/exchange/append runs on per-device locals
+inside the ``lax.while_loop`` body.
 """
 from __future__ import annotations
 
@@ -75,25 +93,31 @@ from repro.core.engine.trial import step_fn
 
 INVALID = jnp.int32(-1)
 
+# the device shard key is (h_hi * 2**31 + h_lo) % n_shards computed in
+# uint32 residues; (n-1)**2 + (n-1) must stay below 2**31
+MAX_SHARDS = 1 << 15
+
 
 # --------------------------------------------------------------------------- #
-# device-resident gid -> local-nid interning
+# device-resident (h_hi, h_lo) -> local-nid interning
 # --------------------------------------------------------------------------- #
 
 
 class InternState(NamedTuple):
     """Per-shard device-resident node intern table.
 
-    Maps global ids (gids, assigned by the host in label-encounter order) to
-    the shard's dense local id space ``[0, n_cap)`` that the engine state
-    arrays are indexed by.  ``l2g`` is the reverse map used by
-    ``materialize``/``live_edges`` to translate summaries back to caller
-    labels, so delivery order (which fixes nid assignment) is fully
-    recoverable on the host.
+    Maps 62-bit label hashes — carried as two non-negative ``int32`` words
+    ``(hi, lo)``, the native key shape of :class:`HashTable` — to the
+    shard's dense local id space ``[0, n_cap)`` that the engine state
+    arrays are indexed by.  Ids are assigned first-come-first-served in
+    delivery order, which both routing modes reproduce identically.
+    ``l2h`` is the reverse map used by ``materialize``/``live_edges`` to
+    translate local nids back to label hashes (and, through the host's
+    lazily-folded hash -> label map, to caller labels).
     """
 
-    g2l: HashTable      # (gid, 0) -> local nid
-    l2g: jax.Array      # int32[n_cap]: local nid -> gid (-1 unset)
+    h2l: HashTable      # (h_hi, h_lo) -> local nid
+    l2h: jax.Array      # int32[n_cap, 2]: local nid -> (h_hi, h_lo), -1 unset
     n_nodes: jax.Array  # int32: next fresh nid == number interned
     n_dropped: jax.Array  # int32: endpoint interns dropped at full capacity
 
@@ -103,19 +127,26 @@ def intern_new(cfg: EngineConfig) -> InternState:
     while cap < 4 * cfg.n_cap:   # ~25% max load keeps probes O(1)
         cap <<= 1
     return InternState(
-        g2l=ht_new(cap),
-        l2g=jnp.full((cfg.n_cap,), -1, jnp.int32),
+        h2l=ht_new(cap),
+        l2h=jnp.full((cfg.n_cap, 2), -1, jnp.int32),
         n_nodes=jnp.int32(0),
         n_dropped=jnp.int32(0),
     )
 
 
-def _intern_one(ist: InternState, gid: jax.Array, valid: jax.Array,
-                n_cap: int) -> Tuple[InternState, jax.Array]:
-    """Dense first-come-first-served nid for gid; -1 when invalid/dropped."""
-    g = jnp.where(valid, gid, 0)
-    slot, found = ht_find(ist.g2l, g, 0)
-    existing = ist.g2l.val[slot]
+def _intern_probe(ist: InternState, hi: jax.Array, lo: jax.Array,
+                  valid: jax.Array, n_cap: int,
+                  ) -> Tuple[InternState, jax.Array]:
+    """Sequential-path intern: probe, then insert if fresh (dense FCFS nid).
+
+    Returns ``-1`` when invalid or dropped at capacity.  The intern table
+    keys are full-entropy label hashes, so probes start at the prehashed
+    position (no re-mix — see ``hashtable.ht_find``).
+    """
+    h1 = jnp.where(valid, hi, 0)
+    h2 = jnp.where(valid, lo, 0)
+    slot, found = ht_find(ist.h2l, h1, h2, prehashed=True)
+    existing = ist.h2l.val[slot]
     fresh = valid & ~found
     room = ist.n_nodes < n_cap
     take = fresh & room
@@ -123,8 +154,8 @@ def _intern_one(ist: InternState, gid: jax.Array, valid: jax.Array,
 
     def ins(i: InternState) -> InternState:
         return i._replace(
-            g2l=ht_set(i.g2l, g, 0, nid_new),
-            l2g=i.l2g.at[nid_new].set(g),
+            h2l=ht_set(i.h2l, h1, h2, nid_new, prehashed=True),
+            l2h=i.l2h.at[nid_new].set(jnp.stack([h1, h2])),
             n_nodes=i.n_nodes + 1)
 
     ist = jax.lax.cond(take, ins, lambda i: i, ist)
@@ -134,25 +165,84 @@ def _intern_one(ist: InternState, gid: jax.Array, valid: jax.Array,
     return ist, jnp.where(valid, nid, INVALID)
 
 
-def intern_changes(ist: InternState, gu: jax.Array, gv: jax.Array,
+def _intern_one(ist: InternState, hi: jax.Array, lo: jax.Array,
+                valid: jax.Array, pre_found: jax.Array, pre_slot: jax.Array,
+                n_cap: int) -> Tuple[InternState, jax.Array]:
+    """One intern with a vectorized pre-lookup hint.
+
+    ``pre_found``/``pre_slot`` come from a batch ``ht_find`` against the
+    table state at chunk entry.  Linear-probe insertions only ever fill
+    EMPTY/TOMB slots — they never relocate existing entries — so a
+    pre-found slot stays valid through the scan and the hit path is a
+    single gather.  Only chunk-novel keys (or repeats of one) take the
+    sequential probe-and-insert path.
+    """
+
+    def hit(i: InternState):
+        return i, i.h2l.val[pre_slot]
+
+    def miss(i: InternState):
+        return _intern_probe(i, hi, lo, valid, n_cap)
+
+    ist, nid = jax.lax.cond(pre_found & valid, hit, miss, ist)
+    return ist, jnp.where(valid, nid, INVALID)
+
+
+def intern_changes(ist: InternState,
+                   uh: jax.Array, ul: jax.Array,
+                   vh: jax.Array, vl: jax.Array,
                    n_cap: int) -> Tuple[InternState, jax.Array, jax.Array]:
-    """Intern a change sequence in order: ``(ist, u_nid, v_nid)``.
+    """Intern a hashed change sequence in order: ``(ist, u_nid, v_nid)``.
 
     A change with a dropped endpoint (shard node capacity hit) maps to
     ``(-1, -1)`` — the engine skips it and ``n_dropped`` records the event
-    for the host to surface.
+    for the host to surface.  The assignment order (hence every nid) is
+    identical to a purely sequential intern: the vectorized pre-lookup
+    only short-circuits probes for keys already in the table at entry.
     """
+    valid = (uh >= 0) & (vh >= 0)
+
+    def batch_find(hi, lo):
+        h1 = jnp.where(valid, hi, 0)
+        h2 = jnp.where(valid, lo, 0)
+        return jax.vmap(
+            lambda a, b: ht_find(ist.h2l, a, b, prehashed=True))(h1, h2)
+
+    psu, pfu = batch_find(uh, ul)
+    psv, pfv = batch_find(vh, vl)
 
     def body(ist, ch):
-        gu_i, gv_i = ch
-        valid = (gu_i >= 0) & (gv_i >= 0)
-        ist, nu = _intern_one(ist, gu_i, valid, n_cap)
-        ist, nv = _intern_one(ist, gv_i, valid, n_cap)
+        uh_i, ul_i, vh_i, vl_i, v_i, pfu_i, psu_i, pfv_i, psv_i = ch
+        ist, nu = _intern_one(ist, uh_i, ul_i, v_i, pfu_i, psu_i, n_cap)
+        ist, nv = _intern_one(ist, vh_i, vl_i, v_i, pfv_i, psv_i, n_cap)
         ok = (nu >= 0) & (nv >= 0)
         return ist, (jnp.where(ok, nu, INVALID), jnp.where(ok, nv, INVALID))
 
-    ist, (u, v) = jax.lax.scan(body, ist, (gu, gv))
+    ist, (u, v) = jax.lax.scan(
+        body, ist, (uh, ul, vh, vl, valid, pfu, psu, pfv, psv))
     return ist, u, v
+
+
+# --------------------------------------------------------------------------- #
+# shard keys from hash words
+# --------------------------------------------------------------------------- #
+
+
+def shard_key(uh: jax.Array, ul: jax.Array, vh: jax.Array, vl: jax.Array,
+              n_shards: int) -> jax.Array:
+    """Canonical-pair shard key ``min(h(u), h(v)) % n_shards`` on device.
+
+    The 62-bit hashes live as two 31-bit words, so the min is
+    lexicographic and the modulus composes over uint32 residues:
+    ``(hi * 2**31 + lo) % n == ((hi % n) * (2**31 % n) + lo % n) % n``.
+    All intermediates stay below ``2**31`` because ``n < MAX_SHARDS``.
+    """
+    u_le = (uh < vh) | ((uh == vh) & (ul <= vl))
+    mh = jnp.where(u_le, uh, vh).astype(jnp.uint32)
+    ml = jnp.where(u_le, ul, vl).astype(jnp.uint32)
+    m = jnp.uint32(n_shards)
+    two31 = jnp.uint32((1 << 31) % n_shards)
+    return (((mh % m) * two31 + ml % m) % m).astype(jnp.int32)
 
 
 # --------------------------------------------------------------------------- #
@@ -167,15 +257,16 @@ def _state_specs(cfg: EngineConfig, axis: str):
             jax.tree.map(lambda _: P(axis), ist_sds))
 
 
-def _donate_argnums() -> tuple:
-    """Donate the engine/intern buffers where the backend supports it.
+def _donate_argnums(*argnums: int) -> tuple:
+    """Donate the given buffers where the backend supports it.
 
-    Donation lets XLA update the (large) stacked engine states in place, so
-    the host can stage chunk k+1 while chunk k computes without doubling
-    device memory.  The CPU backend ignores donation (and warns), so gate
-    on the backend instead of spamming every jit call site.
+    Donation lets XLA update the (large) stacked engine states — and the
+    pipeline's double-buffered routing buckets — in place, so the host can
+    stage chunk k+1 while chunk k computes without doubling device memory.
+    The CPU backend ignores donation (and warns), so gate on the backend
+    instead of spamming every jit call site.
     """
-    return () if jax.default_backend() == "cpu" else (0, 1)
+    return () if jax.default_backend() == "cpu" else argnums
 
 
 # compiled-step memo: ShardedSummarizer constructions with identical
@@ -187,11 +278,11 @@ _STEP_CACHE: dict = {}
 
 
 def make_bucketed_step(cfg: EngineConfig, mesh):
-    """jit(shard_map) step consuming host-bucketed ``[n_shards, batch]`` gid
-    rounds.  Bucketing/packing happens on the host; interning and the engine
-    step run on device (``lax.map`` lays multiple shard replicas per device,
-    keeping the engine's control flow intact instead of paying vmap's
-    both-branches cost).  Memoized on ``(cfg, mesh)``."""
+    """jit(shard_map) step consuming host-bucketed ``[n_shards, batch]``
+    hash-word rounds.  Bucketing/packing happens on the host; interning and
+    the engine step run on device (``lax.map`` lays multiple shard replicas
+    per device, keeping the engine's control flow intact instead of paying
+    vmap's both-branches cost).  Memoized on ``(cfg, mesh)``."""
     key = ("bucketed", cfg, mesh)
     if key in _STEP_CACHE:
         return _STEP_CACHE[key]
@@ -199,24 +290,24 @@ def make_bucketed_step(cfg: EngineConfig, mesh):
     est_specs, ist_specs = _state_specs(cfg, axis)
 
     def one(args):
-        est, ist, gu, gv, ins = args
-        ist, u, v = intern_changes(ist, gu, gv, cfg.n_cap)
+        est, ist, uh, ul, vh, vl, ins = args
+        ist, u, v = intern_changes(ist, uh, ul, vh, vl, cfg.n_cap)
         return step_fn(est, u, v, ins != 0, cfg), ist
 
-    def local(est, ist, gu, gv, ins):
-        return jax.lax.map(one, (est, ist, gu, gv, ins))
+    def local(est, ist, uh, ul, vh, vl, ins):
+        return jax.lax.map(one, (est, ist, uh, ul, vh, vl, ins))
 
     fn = jax.jit(shard_map(
         local, mesh=mesh,
-        in_specs=(est_specs, ist_specs, P(axis), P(axis), P(axis)),
+        in_specs=(est_specs, ist_specs) + (P(axis),) * 5,
         out_specs=(est_specs, ist_specs), check_rep=False),
-        donate_argnums=_donate_argnums())
+        donate_argnums=_donate_argnums(0, 1))
     _STEP_CACHE[key] = fn
     return fn
 
 
 # --------------------------------------------------------------------------- #
-# device-routed step — shard keys, all_to_all drain rounds, engine rounds
+# stage 1: route — shard keys + all_to_all drain rounds (state-independent)
 # --------------------------------------------------------------------------- #
 
 
@@ -232,7 +323,8 @@ class RouterGeometry(NamedTuple):
     ``full_drain_rounds = ceil(chunk / lane_cap)`` is a delivery
     guarantee); when it holds the caller never needs to inspect the
     watermark, which is what lets ``ShardedSummarizer`` elide the per-chunk
-    host sync.
+    host sync — and, since the route stage depends on nothing but the
+    chunk, pipeline chunk k+1's routing under chunk k's engine rounds.
     """
 
     n_dev: int                 # mesh devices
@@ -255,6 +347,10 @@ def router_geometry(mesh, n_shards: int, chunk: int, lane_cap: int,
     if n_shards % n_dev != 0:
         raise ValueError(
             f"n_shards={n_shards} must be a multiple of n_dev={n_dev}")
+    if n_shards >= MAX_SHARDS:
+        raise ValueError(
+            f"n_shards={n_shards} must be < {MAX_SHARDS} (the device shard "
+            f"key composes 31-bit hash words over uint32 residues)")
     n_loc = n_shards // n_dev
     n_in = chunk // n_dev            # stream positions per source device
     lane_cap = min(int(lane_cap), n_in)  # a lane can't exceed its source slice
@@ -276,23 +372,25 @@ def router_geometry(mesh, n_shards: int, chunk: int, lane_cap: int,
         drain_guaranteed=max_drain_rounds >= full_drain)
 
 
-def make_routed_step(cfg: EngineConfig, mesh, n_shards: int, chunk: int,
-                     lane_cap: int,
-                     max_drain_rounds: Optional[int] = None):
-    """Compile the device-resident router for a fixed geometry.
+def make_route_step(mesh, n_shards: int, chunk: int, lane_cap: int,
+                    max_drain_rounds: Optional[int] = None):
+    """Compile the state-independent routing stage for a fixed geometry.
 
-    Returns ``(step, geometry)`` where ``step`` is a jitted
-    ``(est, ist, gu, gv, ins) -> (est, ist, delivered, rounds)``: the inputs
-    are the stacked per-shard states plus flat ``[chunk]`` gid-encoded
-    change arrays (``-1`` padded); ``delivered`` is, per device, the first
+    Returns ``(route, geometry)`` where ``route`` is a jitted
+    ``(uh, ul, vh, vl, ins) -> (buckets, counts, delivered, rounds)``: the
+    inputs are flat ``[chunk]`` hash-word change arrays (``-1`` padded);
+    ``buckets`` is the 5-tuple of per-shard ``[n_shards, acc_cap]`` bucket
+    arrays in delivery (== stream) order; ``counts`` is ``[n_shards]``
+    delivered-change counts; ``delivered`` is, per device, the first
     stream position NOT routed when ``max_drain_rounds`` ran out
     (``chunk`` when everything was delivered — always, when
     ``geometry.drain_guaranteed``); ``rounds`` is the number of exchange
     rounds the drain loop ran (1 = no overflow anywhere).
 
-    Memoized on the full geometry key.
+    The stage reads no engine or intern state, so its dispatch for chunk
+    k+1 can overlap chunk k's engine stage.  Memoized on the geometry key.
     """
-    key = ("routed", cfg, mesh, n_shards, chunk, lane_cap, max_drain_rounds)
+    key = ("route", mesh, n_shards, chunk, lane_cap, max_drain_rounds)
     if key in _STEP_CACHE:
         return _STEP_CACHE[key]
     axis = mesh.axis_names[0]
@@ -300,21 +398,20 @@ def make_routed_step(cfg: EngineConfig, mesh, n_shards: int, chunk: int,
     n_dev, n_loc, n_in = geom.n_dev, geom.n_loc, geom.n_in
     lane_cap, acc_cap = geom.lane_cap, geom.acc_cap
     r_cap = n_dev * lane_cap
-    b = cfg.batch
-    est_specs, ist_specs = _state_specs(cfg, axis)
 
-    def local(est, ist, gu, gv, ins):
-        # est/ist stacked [n_loc, ...]; gu/gv/ins local [n_in]
+    def local(uh, ul, vh, vl, ins):
+        # uh/ul/vh/vl/ins local [n_in]
         me = jax.lax.axis_index(axis)
-        valid = (gu >= 0) & (gv >= 0)
-        dest = jnp.where(valid, jnp.minimum(gu, gv) % n_shards, n_shards)
+        valid = (uh >= 0) & (vh >= 0)
+        dest = jnp.where(valid, shard_key(uh, ul, vh, vl, n_shards), n_shards)
         pos = me * n_in + jnp.arange(n_in, dtype=jnp.int32)
-        payload = jnp.stack([gu, gv, ins.astype(jnp.int32)], axis=-1)
+        payload = jnp.stack(
+            [uh, ul, vh, vl, ins.astype(jnp.int32)], axis=-1)
         rows = jnp.arange(n_loc, dtype=jnp.int32)[:, None]
         sid = jnp.arange(n_shards, dtype=jnp.int32)[None]
 
         def drain_round(carry):
-            r, delivered, a_gu, a_gv, a_ins, counts = carry
+            r, delivered, acc, counts = carry
             pending = valid & (pos >= delivered)
 
             # rank of each pending change within its (source, dest) lane;
@@ -340,44 +437,78 @@ def make_routed_step(cfg: EngineConfig, mesh, n_shards: int, chunk: int,
             dd = jnp.where(keep, dest // n_loc, n_dev)  # OOB index -> drop
             dl = jnp.where(keep, dest % n_loc, 0)
             rk = jnp.where(keep, rank, 0)
-            send = jnp.full((n_dev, n_loc, lane_cap, 3), -1, jnp.int32)
+            send = jnp.full((n_dev, n_loc, lane_cap, 5), -1, jnp.int32)
             send = send.at[dd, dl, rk].set(payload, mode="drop")
 
             # exchange: recv[j, l] = source j's lane for my local shard l
             recv = jax.lax.all_to_all(send, axis, split_axis=0,
                                       concat_axis=0, tiled=True)
             # source-major flatten per shard == global stream order
-            recv = jnp.swapaxes(recv, 0, 1).reshape(n_loc, r_cap, 3)
-            rgu, rgv, rins = recv[..., 0], recv[..., 1], recv[..., 2]
+            recv = jnp.swapaxes(recv, 0, 1).reshape(n_loc, r_cap, 5)
 
             # stable compaction, appended at each shard's bucket watermark
-            rvalid = rgu >= 0
+            rvalid = recv[..., 0] >= 0
             cpos = jnp.cumsum(rvalid.astype(jnp.int32), axis=1) - 1
             idx = jnp.where(rvalid, counts[:, None] + cpos, acc_cap)
-            a_gu = a_gu.at[rows, idx].set(rgu, mode="drop")
-            a_gv = a_gv.at[rows, idx].set(rgv, mode="drop")
-            a_ins = a_ins.at[rows, idx].set(rins, mode="drop")
+            acc = acc.at[rows, idx].set(recv, mode="drop")
             counts = counts + rvalid.sum(axis=1).astype(jnp.int32)
-            return r + 1, first, a_gu, a_gv, a_ins, counts
+            return r + 1, first, acc, counts
 
         # drain until the whole chunk is delivered or the round budget is
         # spent; the loop condition is pmin-agreed, hence mesh-uniform
         init = (jnp.int32(0), jnp.int32(0),
-                jnp.full((n_loc, acc_cap), -1, jnp.int32),
-                jnp.full((n_loc, acc_cap), -1, jnp.int32),
-                jnp.zeros((n_loc, acc_cap), jnp.int32),
+                jnp.full((n_loc, acc_cap, 5), -1, jnp.int32),
                 jnp.zeros((n_loc,), jnp.int32))
-        rounds, delivered, a_gu, a_gv, a_ins, counts = jax.lax.while_loop(
+        rounds, delivered, acc, counts = jax.lax.while_loop(
             lambda c: (c[1] < chunk) & (c[0] < geom.max_drain_rounds),
             drain_round, init)
+        return (acc[..., 0], acc[..., 1], acc[..., 2], acc[..., 3],
+                acc[..., 4], counts, delivered[None], rounds[None])
 
+    fn = jax.jit(shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis),) * 5,
+        out_specs=(P(axis),) * 8, check_rep=False))
+    _STEP_CACHE[key] = (fn, geom)
+    return fn, geom
+
+
+# --------------------------------------------------------------------------- #
+# stage 2: engine — intern the routed buckets, run pmax-agreed engine rounds
+# --------------------------------------------------------------------------- #
+
+
+def make_engine_step(cfg: EngineConfig, mesh, n_shards: int, acc_cap: int):
+    """Compile the state-carrying engine stage for routed buckets.
+
+    ``(est, ist, a_uh, a_ul, a_vh, a_vl, a_ins, counts) -> (est, ist)``:
+    interns each shard's ``[n_shards, acc_cap]`` bucket (delivery order ==
+    stream order) and runs ``pmax(ceil(max_count / batch))`` engine rounds
+    so every replica's PRNG advances in lockstep.  The engine/intern
+    states AND the bucket buffers are donated on non-CPU backends — the
+    buckets are the pipeline's double buffer, consumed exactly once.
+
+    Memoized on ``(cfg, mesh, n_shards, acc_cap)``.
+    """
+    key = ("engine", cfg, mesh, n_shards, acc_cap)
+    if key in _STEP_CACHE:
+        return _STEP_CACHE[key]
+    axis = mesh.axis_names[0]
+    n_dev = int(mesh.devices.size)
+    n_loc = n_shards // n_dev
+    b = cfg.batch
+    est_specs, ist_specs = _state_specs(cfg, axis)
+
+    def local(est, ist, a_uh, a_ul, a_vh, a_vl, a_ins, counts):
+        # est/ist stacked [n_loc, ...]; buckets [n_loc, acc_cap]
         # intern each shard's whole bucket up front — the same order host
         # bucketing interns in, so both paths assign identical local ids
         def int_one(args):
-            ist_l, gu_l, gv_l = args
-            return intern_changes(ist_l, gu_l, gv_l, cfg.n_cap)
+            ist_l, uh_l, ul_l, vh_l, vl_l = args
+            return intern_changes(ist_l, uh_l, ul_l, vh_l, vl_l, cfg.n_cap)
 
-        ist, u_all, v_all = jax.lax.map(int_one, (ist, a_gu, a_gv))
+        ist, u_all, v_all = jax.lax.map(
+            int_one, (ist, a_uh, a_ul, a_vh, a_vl))
 
         # one spare round of padding so dynamic_slice never clamps
         u_all = jnp.concatenate(
@@ -405,15 +536,15 @@ def make_routed_step(cfg: EngineConfig, mesh, n_shards: int, chunk: int,
 
         _, est = jax.lax.while_loop(
             lambda c: c[0] < erounds, round_body, (jnp.int32(0), est))
-        return est, ist, delivered[None], rounds[None]
+        return est, ist
 
     fn = jax.jit(shard_map(
         local, mesh=mesh,
-        in_specs=(est_specs, ist_specs, P(axis), P(axis), P(axis)),
-        out_specs=(est_specs, ist_specs, P(axis), P(axis)),
-        check_rep=False), donate_argnums=_donate_argnums())
-    _STEP_CACHE[key] = (fn, geom)
-    return fn, geom
+        in_specs=(est_specs, ist_specs) + (P(axis),) * 6,
+        out_specs=(est_specs, ist_specs), check_rep=False),
+        donate_argnums=_donate_argnums(0, 1, 2, 3, 4, 5, 6))
+    _STEP_CACHE[key] = fn
+    return fn
 
 
 def default_lane_cap(chunk: int, n_dev: int, n_shards: int,

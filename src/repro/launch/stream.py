@@ -64,6 +64,12 @@ def main() -> None:
                     help="sharded: force the per-chunk watermark fetch even "
                          "when delivery is statically guaranteed (measures "
                          "the sync-elision gap)")
+    ap.add_argument("--no-pipeline", action="store_true",
+                    help="sharded: dispatch route and engine stages "
+                         "serially per chunk instead of overlapping chunk "
+                         "k+1's routing with chunk k's engine rounds "
+                         "(measures the pipeline gap; results are "
+                         "bit-identical)")
     ap.add_argument("--algo", choices=list(ALGORITHMS), default="mosso")
     ap.add_argument("--graph", choices=["ba", "copying"], default="ba")
     ap.add_argument("--nodes", type=int, default=2000)
@@ -109,11 +115,11 @@ def main() -> None:
             n_shards=args.shards, routing=args.routing,
             router_chunk=args.router_chunk, lane_cap=args.lane_cap,
             max_drain_rounds=args.max_drain_rounds,
-            chunk_sync=args.chunk_sync)
+            chunk_sync=args.chunk_sync, pipeline=not args.no_pipeline)
         if args.routing == "device":
             print(f"router: lane_cap={ss.lane_cap} "
                   f"max_drain_rounds={ss.max_drain_rounds} "
-                  f"sync_free={ss.sync_free}")
+                  f"sync_free={ss.sync_free} pipeline={ss.pipeline}")
         ss.run(stream)
         phi, m = ss.phi, ss.num_edges
         extra = str(ss.stats())

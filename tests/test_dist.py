@@ -203,18 +203,24 @@ def test_device_router_matches_host_routing_across_8_devices():
 
 
 def test_device_router_drains_skew_across_8_devices():
-    """Key-skewed stream (every change routed to shard 0) at a tiny
-    lane_cap: the on-device drain loop runs many real all_to_all rounds and
-    still matches host routing bit for bit — no host fallback, no per-chunk
-    watermark sync."""
+    """Key-skewed stream (every change routed to one shard: the hub's
+    62-bit hash undercuts every leaf's, so it is always the canonical-pair
+    key) at a tiny lane_cap: the on-device drain loop runs many real
+    all_to_all rounds and still matches host routing bit for bit — no host
+    fallback, no per-chunk watermark sync."""
     print(run_py("""
         import jax, numpy as np
         from repro.core.engine import EngineConfig, ShardedSummarizer
+        from repro.dist.labelhash import hash_label
 
         assert len(jax.devices()) == 8
         cfg = EngineConfig(n_cap=128, m_cap=1024, d_cap=32, sn_cap=24,
                            c=8, batch=8, escape=0.3)
-        stream = [("hub", "x%03d" % i, True) for i in range(1, 100)]
+        leaves = ["x%03d" % i for i in range(1, 100)]
+        lo = min(hash_label(x) for x in leaves)
+        hub = next(h for h in ("hub%d" % j for j in range(100000))
+                   if hash_label(h) < lo)
+        stream = [(hub, x, True) for x in leaves]
         kw = dict(n_shards=16, router_chunk=128)
         dev = ShardedSummarizer(cfg, routing="device", lane_cap=2, **kw)
         host = ShardedSummarizer(cfg, routing="host", **kw)
@@ -231,7 +237,7 @@ def test_device_router_drains_skew_across_8_devices():
             for name, dl, hl in zip(d._fields, d, h):
                 np.testing.assert_array_equal(np.asarray(dl), np.asarray(hl),
                                               err_msg=name)
-        truth = {("hub", "x%03d" % i) for i in range(1, 100)}
+        truth = {(min(hub, x), max(hub, x)) for x in leaves}
         assert dev.live_edges() == truth
         assert dev.materialize().decode_edges() == truth
         print("8-device skew drain OK:", st["router_drain_rounds"], "rounds")

@@ -84,7 +84,7 @@ def test_device_routing_states_bit_identical_to_host():
                 np.asarray(dl), np.asarray(hl), err_msg=name)
     for d, h in zip(dev.host_interns(), host.host_interns()):
         assert int(d.n_nodes) == int(h.n_nodes)
-        np.testing.assert_array_equal(np.asarray(d.l2g), np.asarray(h.l2g))
+        np.testing.assert_array_equal(np.asarray(d.l2h), np.asarray(h.l2h))
 
 
 def test_lane_overflow_drains_on_device_by_default():
@@ -138,17 +138,21 @@ def test_node_capacity_drop_raises_at_sync(routing):
 
 
 def test_shard_of_is_read_only():
-    """Querying placement must not assign gids (it would desynchronize a
-    differential pair of runs): unseen labels raise instead."""
+    """Placement is a pure function of the 62-bit label hash — host
+    bucketing, the device router, and ``shard_of`` must all agree — and
+    querying it mutates nothing: unseen labels raise instead of being
+    assigned."""
+    from repro.dist.labelhash import hash_label
+
     stream = _stream(seed=61)
     ss = ShardedSummarizer(_cfg(), routing="device", n_shards=2,
                            router_chunk=64).run(stream)
     u, v, _ = stream[0]
-    assert ss.shard_of(u, v) == min(ss._gids[u], ss._gids[v]) % 2
-    n_before = len(ss._gids)
+    assert ss.shard_of(u, v) == min(hash_label(u), hash_label(v)) % 2
+    n_before = len(ss._h2label)
     with pytest.raises(LookupError, match="has not been streamed"):
         ss.shard_of("never-streamed-a", "never-streamed-b")
-    assert len(ss._gids) == n_before
+    assert len(ss._h2label) == n_before
 
 
 def test_arbitrary_hashable_labels_roundtrip():
@@ -166,13 +170,24 @@ def test_arbitrary_hashable_labels_roundtrip():
 # --------------------------------------------------------------------------- #
 
 
+def _skew_hub(leaves):
+    """A hub label whose 62-bit hash undercuts every leaf's, so the
+    canonical pair key ``min(h(u), h(v))`` is always the hub's and every
+    change routes to ONE shard — the worst case for the capacity-bounded
+    lanes.  (Placement is hash-based since PR 4; being streamed first no
+    longer matters.)"""
+    from repro.dist.labelhash import hash_label
+    lo = min(hash_label(x) for x in leaves)
+    return next(h for h in (f"hub{j}" for j in range(100_000))
+                if hash_label(h) < lo)
+
+
 def _skew_stream(n_leaves, delete_every=3):
-    """Adversarial key skew: a star around one hub.  The hub is the first
-    label streamed, so gid(hub) == 0 and every change routes to shard 0 —
-    the worst case for the capacity-bounded lanes."""
-    ins = [("hub", f"x{i:03d}", True) for i in range(n_leaves)]
-    dels = [("hub", f"x{i:03d}", False) for i in range(0, n_leaves,
-                                                      delete_every)]
+    """Adversarial key skew: a star around a minimal-hash hub."""
+    leaves = [f"x{i:03d}" for i in range(n_leaves)]
+    hub = _skew_hub(leaves)
+    ins = [(hub, x, True) for x in leaves]
+    dels = [(hub, x, False) for x in leaves[::delete_every]]
     return ins + dels
 
 
@@ -201,7 +216,7 @@ def test_key_skew_multi_round_drain_bit_identical_to_host():
                 np.asarray(dl), np.asarray(hl), err_msg=name)
     for d, h in zip(dev.host_interns(), host.host_interns()):
         assert int(d.n_nodes) == int(h.n_nodes)
-        np.testing.assert_array_equal(np.asarray(d.l2g), np.asarray(h.l2g))
+        np.testing.assert_array_equal(np.asarray(d.l2h), np.asarray(h.l2h))
     truth = ground_truth_edges(stream)
     assert dev.live_edges() == truth
     assert dev.materialize().decode_edges() == truth
@@ -312,3 +327,159 @@ def test_default_lane_cap_is_sync_free_by_construction():
     ss = ShardedSummarizer(_cfg(), routing="device", n_shards=2,
                            router_chunk=128)
     assert ss.router_geometry.drain_guaranteed and ss.sync_free
+
+
+# --------------------------------------------------------------------------- #
+# hash-interned labels + pipelined two-stage dispatch (PR 4)
+# --------------------------------------------------------------------------- #
+
+
+def test_pipelined_vs_serial_dispatch_bit_identical_under_key_skew():
+    """The two-stage pipeline (chunk k+1 routed while chunk k steps) is a
+    pure dispatch-order change: under forced key skew with multi-round
+    drains, pipelined and serial device dispatch produce bitwise-identical
+    engine/intern states and identical router telemetry — and the pipelined
+    run's dispatch performed zero host fetches and zero host dict ops."""
+    stream = _skew_stream(60)
+    cfg = _cfg()
+    pipe = ShardedSummarizer(cfg, routing="device", n_shards=2,
+                             router_chunk=64, lane_cap=2)
+    ser = ShardedSummarizer(cfg, routing="device", n_shards=2,
+                            router_chunk=64, lane_cap=2, pipeline=False)
+    assert pipe.pipeline and not ser.pipeline
+    for off in range(0, len(stream), 64):
+        pipe.process(stream[off:off + 64])
+        ser.process(stream[off:off + 64])
+    sp, ss_ = pipe.stats(), ser.stats()
+    assert sp["router_drain_rounds"] >= 2      # genuinely multi-round
+    assert sp["router_syncs"] == 0 and sp["router_host_dict_ops"] == 0
+    tele = [k for k in sp if k.startswith("router_")
+            and k != "router_pipelined"]
+    assert {k: sp[k] for k in tele} == {k: ss_[k] for k in tele}
+    assert sp["router_pipelined"] and not ss_["router_pipelined"]
+    for a, b in zip(pipe.host_states(), ser.host_states()):
+        for name, al, bl in zip(a._fields, a, b):
+            np.testing.assert_array_equal(
+                np.asarray(al), np.asarray(bl), err_msg=name)
+    for a, b in zip(pipe.host_interns(), ser.host_interns()):
+        assert int(a.n_nodes) == int(b.n_nodes)
+        np.testing.assert_array_equal(np.asarray(a.l2h), np.asarray(b.l2h))
+    truth = ground_truth_edges(stream)
+    assert pipe.live_edges() == truth
+    assert pipe.materialize().decode_edges() == truth
+
+
+def test_steady_state_dispatch_is_fetch_free_and_dict_free():
+    """The acceptance contract of the pipelined path: a default-geometry
+    device-routed run performs zero per-chunk device-to-host fetches
+    (``router_syncs``) and zero per-chunk host dict operations
+    (``router_host_dict_ops``) — interleaved sync points (``phi``) must
+    not void either counter."""
+    stream = _stream(seed=91)
+    ss = ShardedSummarizer(_cfg(), routing="device", n_shards=2,
+                           router_chunk=64)
+    assert ss.sync_free and ss.pipeline
+    for off in range(0, len(stream), 64):
+        ss.process(stream[off:off + 64])
+        _ = ss.phi                      # sync point between chunks
+    st = ss.stats()
+    assert st["router_syncs"] == 0
+    assert st["router_host_dict_ops"] == 0
+    assert st["router_sync_free"] and st["router_pipelined"]
+    assert ss.live_edges() == ground_truth_edges(stream)
+
+
+def test_label_hash_collision_raises_loudly():
+    """Two distinct labels landing on one 62-bit hash must never silently
+    merge: the lazy reverse-map fold detects the collision and raises."""
+    from repro.dist import labelhash
+
+    ss = ShardedSummarizer(_cfg(), routing="device", n_shards=2,
+                           router_chunk=64)
+    h = labelhash.hash_label("a")
+    ss.process([("a", "b", True)])
+    # forge a buffered chunk claiming label "evil-twin" has a's hash
+    hi = np.array([(h >> 31)], np.int32)
+    lo = np.array([h & labelhash.MASK31], np.int32)
+    ss._label_buf.append((["evil-twin"], hi, lo))
+    with pytest.raises(RuntimeError, match="hash collision"):
+        ss.stats()
+
+
+def test_pipelined_skew_drain_8_fake_devices_subprocess():
+    """Satellite 8-device variant: the pipelined two-stage dispatch with
+    multi-round drains on a REAL 8-device mesh (subprocess, fake host
+    devices) stays bitwise-identical to serial dispatch and to host
+    bucketing, with zero syncs and zero host dict ops."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    from pathlib import Path
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(Path(__file__).resolve().parent.parent / "src")
+    code = textwrap.dedent("""
+        import jax, numpy as np
+        from repro.core.engine import EngineConfig, ShardedSummarizer
+        from repro.dist.labelhash import hash_label
+
+        assert len(jax.devices()) == 8
+        cfg = EngineConfig(n_cap=128, m_cap=1024, d_cap=32, sn_cap=24,
+                           c=8, batch=8, escape=0.3)
+        leaves = ["x%03d" % i for i in range(90)]
+        lo = min(hash_label(x) for x in leaves)
+        hub = next(h for h in ("hub%d" % j for j in range(100000))
+                   if hash_label(h) < lo)
+        stream = [(hub, x, True) for x in leaves]
+        kw = dict(n_shards=16, router_chunk=128, lane_cap=2)
+        pipe = ShardedSummarizer(cfg, routing="device", **kw)
+        ser = ShardedSummarizer(cfg, routing="device", pipeline=False, **kw)
+        host = ShardedSummarizer(cfg, routing="host", n_shards=16,
+                                 router_chunk=128)
+        assert pipe.router_geometry.n_dev == 8
+        assert pipe.sync_free and pipe.pipeline and not ser.pipeline
+        for off in range(0, len(stream), 128):
+            pipe.process(stream[off:off + 128])
+            ser.process(stream[off:off + 128])
+            host.process(stream[off:off + 128])
+        st = pipe.stats()
+        assert st["router_syncs"] == 0 and st["router_host_dict_ops"] == 0
+        assert st["router_drain_rounds"] >= 2, st
+        for other in (ser, host):
+            assert pipe.shard_phis() == other.shard_phis()
+            for a, b in zip(pipe.host_states(), other.host_states()):
+                for name, al, bl in zip(a._fields, a, b):
+                    np.testing.assert_array_equal(
+                        np.asarray(al), np.asarray(bl), err_msg=name)
+        truth = {(min(hub, x), max(hub, x)) for x in leaves}
+        assert pipe.live_edges() == truth
+        assert pipe.materialize().decode_edges() == truth
+        print("8-device pipelined skew drain OK:",
+              st["router_drain_rounds"], "rounds")
+    """)
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout
+
+
+def test_label_buffer_compacts_on_long_zero_sync_runs():
+    """A dispatch-only run must not buffer every label occurrence until
+    the next sync: the buffer compacts to unique hashes every 64 chunks
+    (numpy only — the dict-op and sync counters stay 0), and decoding
+    after the eventual sync is unaffected."""
+    edges = sbm_edges(120, 4, 0.4, 0.02, seed=101)
+    stream = edges_to_fully_dynamic_stream(edges, delete_prob=0.2, seed=102)
+    assert len(stream) > 64 * 8             # many chunks, one process call
+    ss = ShardedSummarizer(_cfg(n_cap=512, m_cap=4096), routing="device",
+                           n_shards=2, router_chunk=8)
+    ss.process(stream)
+    # > 64 chunks ran; without compaction there would be 2 entries/chunk
+    assert len(ss._label_buf) < 2 * len(stream) // 8, len(ss._label_buf)
+    st = ss.stats()
+    assert st["router_syncs"] == 0 and st["router_host_dict_ops"] == 0
+    assert ss.live_edges() == ground_truth_edges(stream)
+    assert ss.materialize().decode_edges() == ground_truth_edges(stream)
