@@ -131,7 +131,14 @@ def main() -> None:
                   f"({ratio:.2f}x, tolerance {REGRESSION_TOLERANCE:.2f}x)")
         if regressions:
             sys.exit(1)
-        print("compare: no regressions")
+        if len(skipped) >= len(matched):
+            # a gate that compares nothing must fail loudly, not pass —
+            # renamed rows or a config drift would otherwise disarm it
+            sys.exit("--compare: no comparable rows (all matched rows "
+                     "were renamed or run under a different config)")
+        print(f"compare: no regressions "
+              f"({len(matched) - len(skipped)} rows within "
+              f"{REGRESSION_TOLERANCE:.2f}x)")
 
 
 if __name__ == '__main__':

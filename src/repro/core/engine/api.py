@@ -470,10 +470,13 @@ class ShardedSummarizer:
                                for (_, hi, lo) in buf])
         uniq, first, inv = np.unique(comb, return_index=True,
                                      return_inverse=True)
+        # identity escape mirrors _fold_labels' `prev is not label`: a
+        # non-reflexive label (NaN) must not read as a self-collision
         same = arr == arr[first[inv]]
-        if not bool(np.all(same)):
-            i = int(np.argmin(same))
-            raise self._collision(arr[int(first[inv[i]])], arr[i], comb[i])
+        for i in np.flatnonzero(~np.asarray(same, bool)):
+            j = int(first[inv[int(i)]])
+            if arr[int(i)] is not arr[j]:
+                raise self._collision(arr[j], arr[int(i)], comb[int(i)])
         keep = arr[first]
         if self._label_head is None:
             self._label_head = (keep, uniq)
@@ -484,10 +487,12 @@ class ShardedSummarizer:
             known = (pos < len(h_hash)) & (h_hash[posc] == uniq)
             if bool(np.any(known)):
                 same2 = keep[known] == h_lab[posc[known]]
-                if not bool(np.all(same2)):
-                    i = int(np.flatnonzero(known)[int(np.argmin(same2))])
-                    raise self._collision(h_lab[int(posc[i])], keep[i],
-                                          uniq[i])
+                kidx = np.flatnonzero(known)
+                for k in np.flatnonzero(~np.asarray(same2, bool)):
+                    i = int(kidx[int(k)])
+                    if keep[i] is not h_lab[int(posc[i])]:
+                        raise self._collision(h_lab[int(posc[i])], keep[i],
+                                              uniq[i])
             fresh = ~known
             m_hash = np.concatenate([h_hash, uniq[fresh]])
             order = np.argsort(m_hash)       # disjoint hashes: total order
