@@ -160,14 +160,20 @@ def router_throughput(n_nodes: int = 700, deg: int = 4, n_shards: int = 2,
                       chunk: int = 512) -> List[Row]:
     """Beyond-paper: sharded stream throughput across routing/sync modes.
 
-    Four configurations run the same shards over the same FD stream with
+    Six configurations run the same shards over the same FD stream with
     the same chunk boundaries (so their engines are in lockstep — equal phi
     is part of the measurement's sanity check):
 
     * ``device`` — the default pipelined sync-free router: hash-based
       placement (zero host dict ops), delivery statically guaranteed by
-      the drain budget (zero per-chunk host fetches), and chunk k+1's
-      route stage dispatched while chunk k's engine stage runs.
+      the drain budget (zero per-chunk host fetches), chunk k+1's route
+      stage dispatched while chunk k's engine stage runs, and the shard
+      replicas stacked per device batched as ONE vmapped engine program.
+    * ``device-vmapped`` — ``replica_exec="vmap"`` pinned explicitly (the
+      default today; the row stays meaningful if the default ever moves).
+    * ``device-map`` — ``replica_exec="map"``: replicas serialized per
+      device by ``lax.map``, the replica-layout differential reference;
+      the delta against ``device-vmapped`` is the replica-parallelism win.
     * ``device-serial`` — the same two stages dispatched back to back per
       chunk; the delta against ``device`` is the pure pipeline win.
     * ``device-synced`` — ``chunk_sync=True``, i.e. the PR-2 behavior of
@@ -187,6 +193,8 @@ def router_throughput(n_nodes: int = 700, deg: int = 4, n_shards: int = 2,
     cfg = EngineConfig(n_cap=2048, m_cap=1 << 14, d_cap=64, sn_cap=48,
                        c=16, batch=64, escape=0.2)
     modes = (("device", dict(routing="device")),
+             ("device-vmapped", dict(routing="device", replica_exec="vmap")),
+             ("device-map", dict(routing="device", replica_exec="map")),
              ("device-serial", dict(routing="device", pipeline=False)),
              ("device-synced", dict(routing="device", chunk_sync=True)),
              ("host", dict(routing="host")))
@@ -224,6 +232,9 @@ def router_throughput(n_nodes: int = 700, deg: int = 4, n_shards: int = 2,
     # lockstep sanity: only guaranteed when no host fallback ran (a
     # fallback legitimately changes the PRNG schedule)
     assert overflows["device-synced"] or len(set(phis.values())) == 1, phis
+    rows.append(("router/replica_vmap_gain", us["device-vmapped"],
+                 f"map_over_vmapped="
+                 f"{us['device-map']/max(us['device-vmapped'],1e-9):.2f}x"))
     rows.append(("router/pipeline_gain", us["device"],
                  f"serial_over_pipelined="
                  f"{us['device-serial']/max(us['device'],1e-9):.2f}x"))

@@ -65,7 +65,12 @@ def compare_rows(old_rows: list, new_rows: list, tol: float):
     baseline is only meaningful on hardware comparable to the machine
     that recorded it; a much slower CI host can trip the tolerance with
     no code change.  Re-record the baseline (``--json`` on a clean
-    checkout) when the reference hardware changes.
+    checkout) when the reference hardware changes.  On noisy reference
+    hardware, record the committed baseline as a per-row MAX over a few
+    clean-checkout runs (an envelope): run-to-run variance then stays
+    inside the tolerance while the regressions this gate exists for
+    (compile-in-the-loop, algorithmic blowups — historically 10x+)
+    still trip it.
     """
     old = {r["name"]: r for r in old_rows}
     out, skipped = [], []

@@ -24,6 +24,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.checkpoint import checkpointer
 from repro.core.engine import EngineConfig, ShardedSummarizer
+from repro.dist.router import DEFAULT_REPLICA_EXEC
 from repro.graph.streams import (barabasi_albert_edges,
                                  edges_to_fully_dynamic_stream)
 
@@ -39,8 +40,11 @@ cfg = EngineConfig(n_cap=1 << max(8, (2 * n_nodes).bit_length()),
                    d_cap=64, sn_cap=48, c=24, batch=64, escape=0.2)
 ss = ShardedSummarizer(cfg, n_shards=2, router_chunk=512)
 assert ss.routing == "device" and ss.sync_free and ss.pipeline
+# the constructor resolves replica_exec=None to the backend-aware default
+assert ss.replica_exec == DEFAULT_REPLICA_EXEC
 print(f"router: chunk={ss.router_chunk} lane_cap={ss.lane_cap} "
-      f"sync_free={ss.sync_free} pipeline={ss.pipeline}")
+      f"sync_free={ss.sync_free} pipeline={ss.pipeline} "
+      f"replica_exec={ss.replica_exec}")
 
 ckpt_dir = "/tmp/mosso_stream_ckpt"
 half = (len(stream) // 2 // ss.router_chunk) * ss.router_chunk

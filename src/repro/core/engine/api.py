@@ -290,14 +290,33 @@ class ShardedSummarizer:
       multi-round drains — as long as no host fallback ran (the fallback
       legitimately shifts the PRNG schedule).
 
+    **Replica execution** (``replica_exec=``): how the shard replicas
+    stacked on one device (``n_shards > n_devices``, the production
+    layout) are laid out inside the compiled step:
+
+    * ``"vmap"`` — one batched program over the stacked replica axis.
+      The trial engine is cond-free predicated data flow, so vmap pays
+      no both-branches penalty and the engine stage becomes one
+      replica-parallel step.
+    * ``"map"`` — ``lax.map`` over replicas, serializing them per
+      device.  Also the differential reference, like ``routing="host"``:
+      both modes are leaf-bitwise state-identical on identical inputs.
+
+    The default (``repro.dist.router.DEFAULT_REPLICA_EXEC``) is
+    backend-aware: vmap on accelerators, map on the XLA CPU backend,
+    where batched control flow carries a measured fixed dispatch tax
+    (see docs/KNOWN_ISSUES.md).  ``REPRO_REPLICA_EXEC`` overrides.
+
     **Routing telemetry.** ``router_syncs`` counts per-chunk watermark
     fetches (0 when ``sync_free``), ``router_host_dict_ops`` counts
     label-map mutations performed inside dispatch (0 on the hash-routed
     steady state — the reverse map folds lazily at sync points),
     ``router_overflows`` counts changes replayed through the host path,
     and ``stats()['router_drain_rounds']`` counts extra drain rounds
-    beyond the first (device-resident counter, fetched only at sync
-    points).
+    beyond the first (carried in the engine stage's device-side state —
+    the route stage's round count rides into the engine step, which
+    accumulates it on device; fetched only at sync points, with zero
+    host-side buffering of per-chunk counts).
 
     **Capacity semantics.** Edge partitioning is a vertex cut: a node
     touching edges in several partitions occupies a local id in each, so
@@ -317,6 +336,7 @@ class ShardedSummarizer:
                  max_drain_rounds: Optional[int] = None,
                  chunk_sync: bool = False,
                  pipeline: bool = True,
+                 replica_exec: Optional[str] = None,
                  **overrides) -> None:
         import math
 
@@ -330,6 +350,13 @@ class ShardedSummarizer:
         elif overrides:
             cfg = dataclasses.replace(cfg, **overrides)
         self.cfg = cfg
+        if replica_exec is None:
+            replica_exec = dist_router.DEFAULT_REPLICA_EXEC
+        if replica_exec not in dist_router.REPLICA_EXEC_MODES:
+            raise ValueError(
+                f"replica_exec must be one of "
+                f"{dist_router.REPLICA_EXEC_MODES}: {replica_exec}")
+        self.replica_exec = replica_exec
         if mesh is None:
             from repro.launch.mesh import make_engine_mesh
             if n_shards is None:
@@ -363,15 +390,18 @@ class ShardedSummarizer:
         self.router_overflows = 0   # changes spilled to the host path
         self.router_syncs = 0       # per-chunk watermark fetches performed
         self.chunk_sync = bool(chunk_sync)
-        self._drain_rounds = 0      # folded drain counter (device scalar)
-        self._drain_parts: List = []  # unfolded per-chunk round counts
-        self._bucketed = dist_router.make_bucketed_step(cfg, mesh)
+        # drain-round telemetry lives IN the engine stage's carried state
+        # (int32[n_dev], accumulated on device, fetched only at sync points)
+        self._drain_rounds = jnp.zeros((n_dev,), jnp.int32)
+        self._bucketed = dist_router.make_bucketed_step(cfg, mesh,
+                                                        replica_exec)
         if routing == "device":
             self._route, self.router_geometry = dist_router.make_route_step(
                 mesh, self.n_shards, self.router_chunk, self.lane_cap,
                 max_drain_rounds)
             self._engine = dist_router.make_engine_step(
-                cfg, mesh, self.n_shards, self.router_geometry.acc_cap)
+                cfg, mesh, self.n_shards, self.router_geometry.acc_cap,
+                replica_exec)
             self.lane_cap = self.router_geometry.lane_cap
             self.max_drain_rounds = self.router_geometry.max_drain_rounds
             # delivery statically guaranteed -> the overflow watermark never
@@ -640,25 +670,23 @@ class ShardedSummarizer:
         dispatch: the pipeline needs the delivery guarantee)."""
         packed = self._pack_chunk(chunk, pad_to=self.router_chunk)
         *buckets, counts, delivered, rounds = self._route(*packed)
-        routed = (*buckets, counts)
+        # the route stage's round count rides into the engine stage, which
+        # folds it into the carried device-side telemetry — no host-side
+        # buffering of per-chunk drain counts at all
+        routed = (*buckets, counts, rounds)
         self._host_cache = None
-        # drain telemetry: a list append per chunk (no device dispatch on
-        # the sync-free hot path); folded device-side every 64 chunks —
-        # and the label buffer compacts to unique hashes on the same
-        # cadence (numpy only: no device fetch, no host dict ops)
-        self._drain_parts.append(rounds)
-        if len(self._drain_parts) >= 64:
-            self._fold_drain_rounds()
+        # the label buffer compacts to unique hashes every 128 entries
+        # (numpy only: no device fetch, no host dict ops)
         if len(self._label_buf) >= 128:
             self._compact_label_buf()
         if self.pipeline:
             prev, self._pending = self._pending, routed
             if prev is not None:
-                self.state, self.intern = self._engine(
-                    self.state, self.intern, *prev)
+                self.state, self.intern, self._drain_rounds = self._engine(
+                    self.state, self.intern, self._drain_rounds, *prev)
             return
-        self.state, self.intern = self._engine(
-            self.state, self.intern, *routed)
+        self.state, self.intern, self._drain_rounds = self._engine(
+            self.state, self.intern, self._drain_rounds, *routed)
         if self.sync_free:
             return                           # statically fully delivered
         self.router_syncs += 1
@@ -674,8 +702,8 @@ class ShardedSummarizer:
         holds; sync points call this before reading any state."""
         if self._pending is not None:
             prev, self._pending = self._pending, None
-            self.state, self.intern = self._engine(
-                self.state, self.intern, *prev)
+            self.state, self.intern, self._drain_rounds = self._engine(
+                self.state, self.intern, self._drain_rounds, *prev)
 
     def flush(self) -> None:
         """Public barrier: drain the dispatch pipeline (device-side only).
@@ -683,18 +711,6 @@ class ShardedSummarizer:
         After this, ``state``/``intern`` reflect every processed change;
         useful before checkpointing the raw device state."""
         self._flush_dispatch()
-
-    def _fold_drain_rounds(self) -> None:
-        """Fold the buffered per-chunk drain-round counts into the running
-        device scalar.  Device-side only — never fetches — so calling it
-        from the dispatch path preserves the sync-free contract."""
-        if not self._drain_parts:
-            return
-        import jax.numpy as jnp
-        stack = jnp.stack(self._drain_parts)   # [chunks, n_dev]
-        self._drain_rounds = (self._drain_rounds
-                              + jnp.sum(jnp.max(stack, axis=1) - 1))
-        self._drain_parts.clear()
 
     def run(self, stream: Iterable[Change]) -> "ShardedSummarizer":
         self.process(list(stream))
@@ -787,7 +803,6 @@ class ShardedSummarizer:
         import jax
         self._flush_dispatch()
         self._fold_labels()
-        self._fold_drain_rounds()
         s = self.state
         phi, ne, tr, ac, sk, dr, drr = jax.device_get(
             (s.phi, s.num_edges, s.n_trials, s.n_accept, s.n_skipped,
@@ -799,7 +814,10 @@ class ShardedSummarizer:
                     skipped=tot(sk), n_shards=self.n_shards,
                     routing=self.routing,
                     router_overflows=self.router_overflows,
-                    router_drain_rounds=tot(drr),
+                    # engine-stage carried telemetry: every device carries
+                    # the same accumulated count (the drain loop is
+                    # pmin-agreed), so max == the per-run total
+                    router_drain_rounds=int(np.max(drr)),
                     router_syncs=self.router_syncs,
                     router_host_dict_ops=self._host_dict_ops,
                     router_sync_free=self.sync_free,

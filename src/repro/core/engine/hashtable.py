@@ -10,6 +10,14 @@ load factors we configure).
 Keys are pairs ``(k1, k2)`` of non-negative int32 so that node-pair and
 (node, slot) keys never need 64-bit arithmetic.  ``k1 == EMPTY`` marks a free
 slot and ``k1 == TOMB`` a deleted one.
+
+**Predicated writes.**  Every mutating op takes an ``ok`` predicate; a
+masked call (``ok=False``) probes as usual but writes the slot's existing
+contents back, so it is a structural no-op of constant cost — the
+predication contract the branch-free trial engine (``trial.py``) builds on.
+Masked calls may receive garbage keys (padding, untaken arms): probe loops
+always terminate (a chain ends at EMPTY or wraps after ``cap`` steps) and
+nothing is committed.
 """
 from __future__ import annotations
 
@@ -130,24 +138,28 @@ def _find_insert_slot(ht: HashTable, k1, k2,
     return jnp.where(found, slot1, slot2), found
 
 
-def ht_set(ht: HashTable, k1, k2, v, prehashed: bool = False) -> HashTable:
-    """Upsert key -> v."""
+def ht_set(ht: HashTable, k1, k2, v, prehashed: bool = False,
+           ok=True) -> HashTable:
+    """Upsert key -> v (masked write-back of the slot when ``~ok``)."""
     k1 = jnp.asarray(k1, jnp.int32)
     k2 = jnp.asarray(k2, jnp.int32)
     slot, _ = _find_insert_slot(ht, k1, k2, prehashed)
     return HashTable(
-        k1=ht.k1.at[slot].set(k1),
-        k2=ht.k2.at[slot].set(k2),
-        val=ht.val.at[slot].set(jnp.asarray(v, jnp.int32)),
+        k1=ht.k1.at[slot].set(jnp.where(ok, k1, ht.k1[slot])),
+        k2=ht.k2.at[slot].set(jnp.where(ok, k2, ht.k2[slot])),
+        val=ht.val.at[slot].set(
+            jnp.where(ok, jnp.asarray(v, jnp.int32), ht.val[slot])),
     )
 
 
 def ht_add(ht: HashTable, k1, k2, delta, remove_if_zero: bool = False,
-           ) -> Tuple[HashTable, jax.Array]:
+           ok=True) -> Tuple[HashTable, jax.Array]:
     """val[key] += delta (inserting at 0 if absent); returns (table, new val).
 
     With ``remove_if_zero`` the entry is tombstoned when it reaches 0 —
     used by the E_AB count table so that `SN` adjacency mirrors E>0 pairs.
+    ``new`` is the would-be value either way; the table is only mutated
+    under ``ok``.
     """
     k1 = jnp.asarray(k1, jnp.int32)
     k2 = jnp.asarray(k2, jnp.int32)
@@ -156,17 +168,21 @@ def ht_add(ht: HashTable, k1, k2, delta, remove_if_zero: bool = False,
     new = old + jnp.asarray(delta, jnp.int32)
     dead = remove_if_zero & (new == 0)
     return HashTable(
-        k1=ht.k1.at[slot].set(jnp.where(dead, TOMB, k1)),
-        k2=ht.k2.at[slot].set(jnp.where(dead, TOMB, k2)),
-        val=ht.val.at[slot].set(jnp.where(dead, 0, new)),
+        k1=ht.k1.at[slot].set(
+            jnp.where(ok, jnp.where(dead, TOMB, k1), ht.k1[slot])),
+        k2=ht.k2.at[slot].set(
+            jnp.where(ok, jnp.where(dead, TOMB, k2), ht.k2[slot])),
+        val=ht.val.at[slot].set(
+            jnp.where(ok, jnp.where(dead, 0, new), ht.val[slot])),
     ), new
 
 
-def ht_delete(ht: HashTable, k1, k2) -> HashTable:
-    """Tombstone the key if present (no-op otherwise)."""
+def ht_delete(ht: HashTable, k1, k2, ok=True) -> HashTable:
+    """Tombstone the key if present (no-op otherwise or when ``~ok``)."""
     k1 = jnp.asarray(k1, jnp.int32)
     k2 = jnp.asarray(k2, jnp.int32)
     slot, found = ht_find(ht, k1, k2)
+    found = found & ok
     return HashTable(
         k1=ht.k1.at[slot].set(jnp.where(found, TOMB, ht.k1[slot])),
         k2=ht.k2.at[slot].set(jnp.where(found, TOMB, ht.k2[slot])),

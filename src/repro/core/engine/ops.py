@@ -12,6 +12,16 @@ The encoding itself (P / C+ / C-) is a *derived view* of ``(E_AB, sizes)``
 via the optimal-encoding rule — the engine never materializes it on device,
 which is exactly why moves only need count arithmetic (cf. "Updating Optimal
 Encoding", Sect. 3.6.3).
+
+**Predication contract.**  Every state-mutating op takes an ``ok``
+predicate and lowers to *masked writes*: the op computes its (constant
+number of) destination slots as usual and, when ``~ok``, writes each
+slot's existing contents back — a structural no-op, bit-identical to not
+having called the op at all.  Indices are sanitized at op entry
+(``jnp.where(ok, u, 0)``) so masked calls with padded/garbage inputs stay
+in bounds.  This is what lets ``trial.py`` lower Alg. 1 without a single
+``lax.cond`` and what makes the step ``jax.vmap``-able over shard
+replicas at no both-branches penalty (``repro/dist/router.py``).
 """
 from __future__ import annotations
 
@@ -107,50 +117,49 @@ def canon(a: jax.Array, b: jax.Array) -> Tuple[jax.Array, jax.Array]:
 # --------------------------------------------------------------------------- #
 
 
-def _sn_insert(st: EngineState, x: jax.Array, y: jax.Array) -> EngineState:
-    """Append y to SN(x)'s slot list."""
+def _sn_insert(st: EngineState, x: jax.Array, y: jax.Array,
+               ok) -> EngineState:
+    """Append y to SN(x)'s slot list (masked write under ``~ok``)."""
     i = st.sndeg[x]
     return st._replace(
-        snadj=ht_set(st.snadj, x, i, y),
-        snpos=ht_set(st.snpos, x, y, i),
-        sndeg=st.sndeg.at[x].add(1),
+        snadj=ht_set(st.snadj, x, i, y, ok=ok),
+        snpos=ht_set(st.snpos, x, y, i, ok=ok),
+        sndeg=st.sndeg.at[x].add(jnp.where(ok, 1, 0)),
     )
 
 
-def _sn_remove(st: EngineState, x: jax.Array, y: jax.Array) -> EngineState:
-    """Swap-delete y from SN(x)'s slot list."""
+def _sn_remove(st: EngineState, x: jax.Array, y: jax.Array,
+               ok) -> EngineState:
+    """Swap-delete y from SN(x)'s slot list (masked write under ``~ok``)."""
     i = ht_lookup(st.snpos, x, y)
     last = st.sndeg[x] - 1
     w = ht_lookup(st.snadj, x, last)
-    snadj = ht_set(st.snadj, x, i, w)
-    snpos = ht_set(st.snpos, x, w, i)
-    snadj = ht_delete(snadj, x, last)
-    snpos = ht_delete(snpos, x, y)
-    return st._replace(snadj=snadj, snpos=snpos, sndeg=st.sndeg.at[x].add(-1))
+    snadj = ht_set(st.snadj, x, i, w, ok=ok)
+    snpos = ht_set(st.snpos, x, w, i, ok=ok)
+    snadj = ht_delete(snadj, x, last, ok=ok)
+    snpos = ht_delete(snpos, x, y, ok=ok)
+    return st._replace(snadj=snadj, snpos=snpos,
+                       sndeg=st.sndeg.at[x].add(jnp.where(ok, -1, 0)))
 
 
 def pair_count_add(st: EngineState, a: jax.Array, b: jax.Array,
-                   delta: jax.Array) -> EngineState:
-    """E_AB += delta, maintaining the SN slot lists on 0<->nonzero edges."""
+                   delta: jax.Array, ok=True) -> EngineState:
+    """E_AB += delta, maintaining the SN slot lists on 0<->nonzero edges.
+
+    Cond-free: the 0<->nonzero transition predicates gate masked
+    ``_sn_insert``/``_sn_remove`` calls instead of branching.
+    """
     ca, cb = canon(a, b)
-    eab, new = ht_add(st.eab, ca, cb, delta, remove_if_zero=True)
+    eab, new = ht_add(st.eab, ca, cb, delta, remove_if_zero=True, ok=ok)
     old = new - delta
     st = st._replace(eab=eab)
-    created = (old == 0) & (new != 0)
-    removed = (new == 0) & (old != 0)
+    created = ok & (old == 0) & (new != 0)
+    removed = ok & (new == 0) & (old != 0)
 
-    def do_create(st):
-        st = _sn_insert(st, ca, cb)
-        return jax.lax.cond(ca == cb, lambda s: s,
-                            lambda s: _sn_insert(s, cb, ca), st)
-
-    def do_remove(st):
-        st = _sn_remove(st, ca, cb)
-        return jax.lax.cond(ca == cb, lambda s: s,
-                            lambda s: _sn_remove(s, cb, ca), st)
-
-    st = jax.lax.cond(created, do_create, lambda s: s, st)
-    st = jax.lax.cond(removed, do_remove, lambda s: s, st)
+    st = _sn_insert(st, ca, cb, created)
+    st = _sn_insert(st, cb, ca, created & (ca != cb))
+    st = _sn_remove(st, ca, cb, removed)
+    st = _sn_remove(st, cb, ca, removed & (ca != cb))
     return st
 
 
@@ -159,36 +168,39 @@ def pair_count_add(st: EngineState, a: jax.Array, b: jax.Array,
 # --------------------------------------------------------------------------- #
 
 
-def ensure_node(st: EngineState, u: jax.Array) -> EngineState:
-    def alloc(st):
-        top = st.free_top - 1
-        sid = st.free[top]
-        return st._replace(
-            n2s=st.n2s.at[u].set(sid),
-            ssize=st.ssize.at[sid].set(1),
-            free_top=top,
-        )
-    return jax.lax.cond(st.n2s[u] >= 0, lambda s: s, alloc, st)
-
-
-def _adj_append(st: EngineState, u: jax.Array, v: jax.Array) -> EngineState:
-    i = st.deg[u]
+def ensure_node(st: EngineState, u: jax.Array, ok=True) -> EngineState:
+    """Allocate a singleton supernode for u if unseen (masked under ~ok)."""
+    need = ok & (st.n2s[u] < 0)
+    top = st.free_top - 1
+    sid = st.free[jnp.maximum(top, 0)]
     return st._replace(
-        adj=ht_set(st.adj, u, i, v),
-        epos=ht_set(st.epos, u, v, i),
-        deg=st.deg.at[u].add(1),
+        n2s=st.n2s.at[u].set(jnp.where(need, sid, st.n2s[u])),
+        ssize=st.ssize.at[sid].set(jnp.where(need, 1, st.ssize[sid])),
+        free_top=jnp.where(need, top, st.free_top),
     )
 
 
-def _adj_remove(st: EngineState, u: jax.Array, v: jax.Array) -> EngineState:
+def _adj_append(st: EngineState, u: jax.Array, v: jax.Array,
+                ok) -> EngineState:
+    i = st.deg[u]
+    return st._replace(
+        adj=ht_set(st.adj, u, i, v, ok=ok),
+        epos=ht_set(st.epos, u, v, i, ok=ok),
+        deg=st.deg.at[u].add(jnp.where(ok, 1, 0)),
+    )
+
+
+def _adj_remove(st: EngineState, u: jax.Array, v: jax.Array,
+                ok) -> EngineState:
     i = ht_lookup(st.epos, u, v)
     last = st.deg[u] - 1
     w = ht_lookup(st.adj, u, last)
-    adj = ht_set(st.adj, u, i, w)
-    epos = ht_set(st.epos, u, w, i)
-    adj = ht_delete(adj, u, last)
-    epos = ht_delete(epos, u, v)
-    return st._replace(adj=adj, epos=epos, deg=st.deg.at[u].add(-1))
+    adj = ht_set(st.adj, u, i, w, ok=ok)
+    epos = ht_set(st.epos, u, w, i, ok=ok)
+    adj = ht_delete(adj, u, last, ok=ok)
+    epos = ht_delete(epos, u, v, ok=ok)
+    return st._replace(adj=adj, epos=epos,
+                       deg=st.deg.at[u].add(jnp.where(ok, -1, 0)))
 
 
 def neighbor_slots(st: EngineState, y: jax.Array, d_cap: int,
@@ -213,38 +225,48 @@ def _minh_recompute(st: EngineState, u: jax.Array, d_cap: int) -> jax.Array:
 
 
 def insert_edge(st: EngineState, u: jax.Array, v: jax.Array,
-                d_cap: int) -> EngineState:
-    st = ensure_node(st, u)
-    st = ensure_node(st, v)
+                d_cap: int, ok=True) -> EngineState:
+    u = jnp.where(ok, u, 0)
+    v = jnp.where(ok, v, 0)
+    st = ensure_node(st, u, ok)
+    st = ensure_node(st, v, ok)
     a, b = st.n2s[u], st.n2s[v]
     ca, cb = canon(a, b)
     e = ht_lookup(st.eab, ca, cb)
     t = t_of(st.ssize[a], st.ssize[b], a == b)
-    st = st._replace(phi=st.phi + cost(e + 1, t) - cost(e, t))
-    st = pair_count_add(st, a, b, jnp.int32(1))
-    st = _adj_append(st, u, v)
-    st = _adj_append(st, v, u)
-    minh = st.minh.at[u].min(mixhash(v)).at[v].min(mixhash(u))
-    return st._replace(minh=minh, num_edges=st.num_edges + 1)
+    st = st._replace(
+        phi=st.phi + jnp.where(ok, cost(e + 1, t) - cost(e, t), 0))
+    st = pair_count_add(st, a, b, jnp.int32(1), ok)
+    st = _adj_append(st, u, v, ok)
+    st = _adj_append(st, v, u, ok)
+    # min with INT32_MAX is the identity, so a masked call leaves minh alone
+    no_op = jnp.int32(0x7FFFFFFF)
+    minh = (st.minh.at[u].min(jnp.where(ok, mixhash(v), no_op))
+            .at[v].min(jnp.where(ok, mixhash(u), no_op)))
+    return st._replace(minh=minh,
+                       num_edges=st.num_edges + jnp.where(ok, 1, 0))
 
 
 def delete_edge(st: EngineState, u: jax.Array, v: jax.Array,
-                d_cap: int) -> EngineState:
+                d_cap: int, ok=True) -> EngineState:
+    u = jnp.where(ok, u, 0)
+    v = jnp.where(ok, v, 0)
     a, b = st.n2s[u], st.n2s[v]
     ca, cb = canon(a, b)
     e = ht_lookup(st.eab, ca, cb)
     t = t_of(st.ssize[a], st.ssize[b], a == b)
-    st = st._replace(phi=st.phi + cost(e - 1, t) - cost(e, t))
-    st = pair_count_add(st, a, b, jnp.int32(-1))
-    st = _adj_remove(st, u, v)
-    st = _adj_remove(st, v, u)
-    st = st._replace(num_edges=st.num_edges - 1)
+    st = st._replace(
+        phi=st.phi + jnp.where(ok, cost(e - 1, t) - cost(e, t), 0))
+    st = pair_count_add(st, a, b, jnp.int32(-1), ok)
+    st = _adj_remove(st, u, v, ok)
+    st = _adj_remove(st, v, u, ok)
+    st = st._replace(num_edges=st.num_edges - jnp.where(ok, 1, 0))
 
     def fix(st, x, other):
-        return jax.lax.cond(
-            st.minh[x] == mixhash(other),
-            lambda s: s._replace(minh=s.minh.at[x].set(_minh_recompute(s, x, d_cap))),
-            lambda s: s, st)
+        upd = ok & (st.minh[x] == mixhash(other))
+        mh = _minh_recompute(st, x, d_cap)
+        return st._replace(
+            minh=st.minh.at[x].set(jnp.where(upd, mh, st.minh[x])))
 
     st = fix(st, u, v)
     st = fix(st, v, u)
@@ -322,33 +344,45 @@ def delta_phi_move(st: EngineState, y: jax.Array, target: jax.Array,
 
 def apply_move(st: EngineState, y: jax.Array, target: jax.Array,
                dphi: jax.Array, nbrs: jax.Array, nvalid: jax.Array,
-               ) -> EngineState:
-    """Commit the move (target sid must already be allocated by the caller)."""
-    a = st.n2s[y]
+               ok=True) -> EngineState:
+    """Commit the move (target sid must already be allocated by the caller).
+
+    Masked under ``~ok``: the neighbor loop still runs its fixed ``d_cap``
+    iterations, but every pair-count/SN/size write is a write-back no-op.
+    """
+    y = jnp.where(ok, y, 0)
+    target = jnp.where(ok, target, 0)
+    a = jnp.where(ok, st.n2s[y], 0)
 
     def body(i, st):
-        def upd(st):
-            w = nbrs[i]
-            sw = st.n2s[w]
-            st = pair_count_add(st, a, sw, jnp.int32(-1))
-            return pair_count_add(st, target, sw, jnp.int32(1))
-        return jax.lax.cond(nvalid[i], upd, lambda s: s, st)
+        w_ok = ok & nvalid[i]
+        w = jnp.where(w_ok, nbrs[i], 0)
+        sw = st.n2s[w]
+        st = pair_count_add(st, a, sw, jnp.int32(-1), w_ok)
+        return pair_count_add(st, target, sw, jnp.int32(1), w_ok)
 
-    st = jax.lax.fori_loop(0, nbrs.shape[0], body, st)
-    ssize = st.ssize.at[a].add(-1).at[target].add(1)
-    st = st._replace(n2s=st.n2s.at[y].set(target), ssize=ssize,
-                     phi=st.phi + dphi)
+    # nvalid is a prefix mask (slot < deg), so a dynamic trip count visits
+    # exactly the valid slots — and zero of them on a masked call
+    n_upd = jnp.where(ok, jnp.sum(nvalid.astype(jnp.int32)), 0)
+    st = jax.lax.fori_loop(0, n_upd, body, st)
+    d1 = jnp.where(ok, 1, 0)
+    ssize = st.ssize.at[a].add(-d1).at[target].add(d1)
+    st = st._replace(
+        n2s=st.n2s.at[y].set(jnp.where(ok, target, st.n2s[y])),
+        ssize=ssize,
+        phi=st.phi + jnp.where(ok, dphi, 0))
 
-    def free_a(st):
-        return st._replace(free=st.free.at[st.free_top].set(a),
-                           free_top=st.free_top + 1)
+    # a emptied -> push it back on the free stack (masked write otherwise)
+    push = ok & (ssize[a] == 0)
+    slot = jnp.minimum(st.free_top, st.free.shape[0] - 1)
+    return st._replace(
+        free=st.free.at[slot].set(jnp.where(push, a, st.free[slot])),
+        free_top=st.free_top + jnp.where(push, 1, 0))
 
-    return jax.lax.cond(ssize[a] == 0, free_a, lambda s: s, st)
 
-
-def alloc_sid(st: EngineState) -> Tuple[EngineState, jax.Array]:
-    top = st.free_top - 1
-    sid = st.free[top]
+def alloc_sid(st: EngineState, ok=True) -> Tuple[EngineState, jax.Array]:
+    top = st.free_top - jnp.where(ok, 1, 0)
+    sid = st.free[jnp.maximum(st.free_top - 1, 0)]
     return st._replace(free_top=top), sid
 
 

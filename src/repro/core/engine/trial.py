@@ -12,10 +12,43 @@ input node, the paper's trial loop (Alg. 1) in fixed shape:
 
 Capacity guards (deg <= d_cap, |SN| <= sn_cap) skip — never corrupt — trials
 that exceed the fixed shapes; skips are counted in ``n_skipped``.
+
+**Cond-free invariant.**  The step contains ZERO ``lax.cond``: Alg. 1 is
+lowered as *predicated data flow*.  Every trial computes its arms as
+masked data flow (candidate selection, closed-form dphi, the masked move)
+and commits through the ``ok`` predicates of the ops layer
+(:mod:`repro.core.engine.ops`), so a rejected/skipped/filtered trial is a
+bit-exact structural no-op.  The PRNG is counter-based and stateless, so
+masked lanes drawing (and discarding) randomness cannot shift any other
+lane's stream — the predicated step is bit-identical to the historical
+``lax.cond`` lowering on identical inputs.
+
+**Two lowerings, one semantics.**  The step compiles in one of two
+modes, selected by the static ``dense`` flag of :func:`step_fn` /
+:func:`make_step` — both bit-identical, because every write is masked
+either way:
+
+* ``dense=True`` — the change-application ops (:func:`_apply_change`)
+  execute unconditionally and commit under their predicates.  This is
+  the lowering the ``jax.vmap``-over-replicas layout uses
+  (``repro/dist/router.py``): a batched 0/1-trip while region pays a
+  per-lane select over its whole carry on every fire, which for a
+  state-carrying region that fires once per change costs more than the
+  masked ops themselves.
+* ``dense=False`` — those regions short-circuit through :func:`pwhen`
+  (never a ``lax.cond``), the fast lowering for serial execution where a
+  dead region costs one trip-count check.
+
+The trial loop itself needs no mode split: it is phased (see
+:func:`_one_trial`) so its frequent predicated regions are *pure* and
+carry only scalars — cheap under both lowerings — and engine state is
+carried only by the commit tail, which fires at the move-acceptance
+rate.  Only the per-node ``lax.scan`` — stream-order semantics — stays
+sequential in both modes.
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 from typing import Tuple
 
 import jax
@@ -28,95 +61,165 @@ from repro.core.engine.ops import (alloc_sid, apply_move, delete_edge,
 from repro.core.engine.state import NO_CLUSTER, EngineConfig, EngineState
 
 
+def pwhen(pred: jax.Array, fn, carry):
+    """Uniformly-predicated region: apply ``fn`` to ``carry`` iff ``pred``.
+
+    Lowers to a 0/1-trip ``lax.while_loop``, NOT a ``lax.cond``: a dead
+    predicate costs one trip check, and under ``jax.vmap`` the body runs
+    (batched, at most once) iff any lane is live — SIMT predication.  ``fn``
+    must itself commit through masked writes, because with mixed live/dead
+    lanes it executes for all of them; the loop's per-lane carry select is
+    the second, redundant layer of protection.  ``carry`` may be any
+    pytree (the router predicates its intern path with it too).
+    """
+    done = jax.lax.while_loop(
+        lambda c: c[0],
+        lambda c: (jnp.zeros_like(c[0]), fn(c[1])),
+        (pred, carry))
+    return done[1]
+
+
+def _pregion(pred: jax.Array, fn, carry, dense: bool):
+    """One predicated region, lowered per the step's ``dense`` mode.
+
+    ``dense=True`` executes ``fn`` unconditionally — correct because every
+    write inside commits under its own mask; this is what the vmapped
+    replica layout compiles, where a batched :func:`pwhen` would pay
+    full-carry selects per fire.  ``dense=False`` short-circuits through
+    :func:`pwhen`."""
+    if dense:
+        return fn(carry)
+    return pwhen(pred, fn, carry)
+
+
 def _one_trial(st: EngineState, y: jax.Array, tp: jax.Array,
                tp_minh: jax.Array, seed: jax.Array, cfg: EngineConfig,
-               ) -> EngineState:
-    """Steps 3-5 of Alg. 1 for one testing node y."""
-    a = st.n2s[y]
-    esc = rnd_u01(seed, jnp.uint32(3)) <= cfg.escape
+               pred: jax.Array, dense: bool) -> EngineState:
+    """Steps 3-5 of Alg. 1 for one testing node y, committed under ``pred``.
 
-    # candidate selection: CP(y) = TP(u) ∩ R(y) (min-hash cluster match)
-    my = st.minh[y]
-    cp_mask = (tp_minh == my) & (my != NO_CLUSTER)
-    n_cp = jnp.sum(cp_mask).astype(jnp.int32)
-    pick = rnd_below(seed, jnp.uint32(4), n_cp)
-    # index of the pick-th True in cp_mask
-    csum = jnp.cumsum(cp_mask.astype(jnp.int32)) - 1
-    zidx = jnp.argmax((csum == pick) & cp_mask)
-    z = tp[zidx]
-    cand_target = st.n2s[z]
+    ``pred`` folds the group-validity and TN-filter gates.  The trial is
+    phased so every :func:`pwhen` carries as little as possible — that is
+    what makes the SAME lowering optimal serial AND vmapped (a batched
+    while loop selects its *carry* per lane on every fire; closed-over
+    loop inputs like ``st`` in the pure phases are free):
 
-    fresh_sid = st.free[jnp.maximum(st.free_top - 1, 0)]
-    target = jnp.where(esc, fresh_sid, cand_target)
+    1. ``plan`` (under ``pred``) — candidate selection: pure reads, the
+       carry is a handful of scalars.
+    2. ``eval_phi`` (under ``ok``) — the closed-form dphi: pure reads,
+       the carry is the ``d_cap`` neighbor slots.
+    3. the commit tail (under ``commit``) — the only phase that carries
+       engine state, firing at the (rare) move-acceptance rate.
+    4. trial counters — masked scalar adds, always.
 
-    cap_ok = ((st.deg[y] <= cfg.d_cap)
-              & (st.sndeg[a] <= cfg.sn_cap)
-              & (esc | (st.sndeg[cand_target] <= cfg.sn_cap))
-              & ((~esc) | (st.free_top > 0)))
-    sem_ok = jnp.where(esc, st.ssize[a] > 1, (n_cp > 0) & (cand_target != a))
-    ok = cap_ok & sem_ok
+    The phases are SIBLINGS, never nested: a ``pwhen`` inside a batched
+    ``pwhen`` body promotes the inner region's closed-over state into the
+    outer loop's carry, reintroducing exactly the full-state copies the
+    small carries avoid.
+    """
+    d_cap = cfg.d_cap
 
-    def evaluate(st: EngineState) -> EngineState:
-        dphi, nbrs, nvalid = delta_phi_move(st, y, target, esc, cfg)
-        accept = dphi <= 0
+    def plan(carry):
+        a = st.n2s[y]
+        esc = rnd_u01(seed, jnp.uint32(3)) <= cfg.escape
 
-        def commit(st: EngineState) -> EngineState:
-            st = jax.lax.cond(esc, lambda s: alloc_sid(s)[0], lambda s: s, st)
-            st = apply_move(st, y, target, dphi, nbrs, nvalid)
-            return st._replace(n_accept=st.n_accept + 1)
+        # candidate selection: CP(y) = TP(u) ∩ R(y) (min-hash cluster match)
+        my = st.minh[y]
+        cp_mask = (tp_minh == my) & (my != NO_CLUSTER)
+        n_cp = jnp.sum(cp_mask).astype(jnp.int32)
+        pick = rnd_below(seed, jnp.uint32(4), n_cp)
+        # index of the pick-th True in cp_mask
+        csum = jnp.cumsum(cp_mask.astype(jnp.int32)) - 1
+        zidx = jnp.argmax((csum == pick) & cp_mask)
+        z = tp[zidx]
+        cand_target = st.n2s[z]
 
-        st = jax.lax.cond(accept, commit, lambda s: s, st)
-        return st._replace(n_trials=st.n_trials + 1)
+        fresh_sid = st.free[jnp.maximum(st.free_top - 1, 0)]
+        target = jnp.where(esc, fresh_sid, cand_target)
 
-    def skipped(st: EngineState) -> EngineState:
+        cap_ok = ((st.deg[y] <= cfg.d_cap)
+                  & (st.sndeg[a] <= cfg.sn_cap)
+                  & (esc | (st.sndeg[cand_target] <= cfg.sn_cap))
+                  & ((~esc) | (st.free_top > 0)))
+        sem_ok = jnp.where(esc, st.ssize[a] > 1,
+                           (n_cp > 0) & (cand_target != a))
+        ok = pred & cap_ok & sem_ok
+        return esc, a, target, ok, cap_ok
+
+    f = jnp.zeros((), bool)
+    z32 = jnp.int32(0)
+    esc, a, target, ok, cap_ok = _pregion(pred, plan, (f, z32, z32, f, f),
+                                          dense)
+
+    def eval_phi(c):
+        # masked data flow: dphi of the candidate move (a -> a when the
+        # trial is masked, so every gather stays in bounds)
+        tgt_s = jnp.clip(jnp.where(ok, target, a), 0)
+        return delta_phi_move(st, y, tgt_s, esc, cfg)
+
+    c2 = (z32, jnp.full((d_cap,), -1, jnp.int32), jnp.zeros((d_cap,), bool))
+    dphi, nbrs, nvalid = pwhen(ok, eval_phi, c2)
+    commit = ok & (dphi <= 0)
+
+    def commit_tail(st: EngineState) -> EngineState:
+        st = alloc_sid(st, ok=commit & esc)[0]
+        st = apply_move(st, y, target, dphi, nbrs, nvalid, ok=commit)
         return st._replace(
-            n_trials=st.n_trials + 1,
-            n_skipped=st.n_skipped + jnp.where(~cap_ok, 1, 0).astype(jnp.int32))
+            n_accept=st.n_accept + jnp.where(commit, 1, 0).astype(jnp.int32))
 
-    return jax.lax.cond(ok, evaluate, skipped, st)
+    st = pwhen(commit, commit_tail, st)
+    return st._replace(
+        n_trials=st.n_trials + jnp.where(pred, 1, 0).astype(jnp.int32),
+        n_skipped=st.n_skipped
+        + jnp.where(pred & ~cap_ok, 1, 0).astype(jnp.int32))
 
 
 def _trial_group(st: EngineState, u: jax.Array, seed: jax.Array,
-                 cfg: EngineConfig) -> EngineState:
-    """Steps 1-5 of Alg. 1 for one input node u."""
+                 cfg: EngineConfig, dense: bool) -> EngineState:
+    """Steps 1-5 of Alg. 1 for one input node u (predicated, cond-free).
 
-    def run(st: EngineState) -> EngineState:
-        du = st.deg[u]
-        ks = jnp.arange(cfg.c, dtype=jnp.uint32)
-        ridx = jax.vmap(lambda k: rnd_below(seed, k * 8 + 1, du))(ks)
-        tp = ht_lookup_batch(st.adj, jnp.full((cfg.c,), u, jnp.int32), ridx,
-                             default=0)
-        tp_minh = st.minh[tp]
+    The TP-sampling preamble is pure and cheap, so it runs unmasked for
+    every lane (including padding, with a clipped index); ``valid`` rides
+    into each trial's predicate instead.
+    """
+    u_s = jnp.clip(u, 0)
+    valid = (u >= 0) & (st.n2s[u_s] >= 0) & (st.deg[u_s] > 0)
 
-        def body(k, st):
-            y = tp[k]
-            tseed = rnd_u32(seed, jnp.uint32(100) + k.astype(jnp.uint32))
-            # TN filter: testing prob 1/deg(w)  (Careful Selection (1))
-            keep = rnd_u01(tseed, jnp.uint32(2)) * st.deg[y].astype(jnp.float32) <= 1.0
-            return jax.lax.cond(
-                keep, lambda s: _one_trial(s, y, tp, tp_minh, tseed, cfg),
-                lambda s: s, st)
+    du = st.deg[u_s]
+    ks = jnp.arange(cfg.c, dtype=jnp.uint32)
+    ridx = jax.vmap(lambda k: rnd_below(seed, k * 8 + 1, du))(ks)
+    tp = ht_lookup_batch(st.adj, jnp.full((cfg.c,), u_s, jnp.int32),
+                         ridx, default=0)
+    tp_minh = st.minh[tp]
 
-        return jax.lax.fori_loop(0, cfg.c, body, st)
+    def body(k, st):
+        y = tp[k]
+        tseed = rnd_u32(seed, jnp.uint32(100) + k.astype(jnp.uint32))
+        # TN filter: testing prob 1/deg(w)  (Careful Selection (1))
+        keep = (rnd_u01(tseed, jnp.uint32(2))
+                * st.deg[y].astype(jnp.float32) <= 1.0)
+        return _one_trial(st, y, tp, tp_minh, tseed, cfg,
+                          pred=valid & keep, dense=dense)
 
-    valid = (u >= 0) & (st.n2s[jnp.clip(u, 0)] >= 0) & (st.deg[jnp.clip(u, 0)] > 0)
-    return jax.lax.cond(valid, run, lambda s: s, st)
+    return jax.lax.fori_loop(0, cfg.c, body, st)
 
 
 def _apply_change(st: EngineState, u: jax.Array, v: jax.Array,
-                  ins: jax.Array, cfg: EngineConfig) -> EngineState:
+                  ins: jax.Array, cfg: EngineConfig, dense: bool,
+                  ) -> EngineState:
     valid = u >= 0
-    st = jax.lax.cond(valid & ins,
-                      lambda s: insert_edge(s, u, v, cfg.d_cap),
-                      lambda s: s, st)
-    st = jax.lax.cond(valid & (~ins),
-                      lambda s: delete_edge(s, u, v, cfg.d_cap),
-                      lambda s: s, st)
+    do_ins = valid & ins
+    do_del = valid & ~ins
+    st = _pregion(do_ins,
+                  lambda s: insert_edge(s, u, v, cfg.d_cap, ok=do_ins),
+                  st, dense)
+    st = _pregion(do_del,
+                  lambda s: delete_edge(s, u, v, cfg.d_cap, ok=do_del),
+                  st, dense)
     return st
 
 
 def step_fn(st: EngineState, u: jax.Array, v: jax.Array, ins: jax.Array,
-            cfg: EngineConfig) -> EngineState:
+            cfg: EngineConfig, dense: bool = False) -> EngineState:
     """One jitted engine step over a padded batch of changes.
 
     Batch semantics (DESIGN.md deviation #3): all changes apply first, then
@@ -124,7 +227,8 @@ def step_fn(st: EngineState, u: jax.Array, v: jax.Array, ins: jax.Array,
     """
 
     def ap(st, ch):
-        return _apply_change(st, ch[0], ch[1], ch[2] != 0, cfg), None
+        return _apply_change(st, ch[0], ch[1], ch[2] != 0, cfg,
+                             dense), None
 
     changes = jnp.stack([u, v, ins.astype(jnp.int32)], axis=1)
     st, _ = jax.lax.scan(ap, st, changes)
@@ -134,12 +238,17 @@ def step_fn(st: EngineState, u: jax.Array, v: jax.Array, ins: jax.Array,
     def tg(st, xs):
         node, idx = xs
         seed = rnd_u32(st.step_no, idx.astype(jnp.uint32) * jnp.uint32(2654435761))
-        return _trial_group(st, node, seed, cfg), None
+        return _trial_group(st, node, seed, cfg, dense), None
 
     st, _ = jax.lax.scan(tg, st, (nodes, jnp.arange(nodes.shape[0], dtype=jnp.int32)))
     return st._replace(step_no=st.step_no + jnp.uint32(1))
 
 
-def make_step(cfg: EngineConfig):
-    """Compile the engine step for a fixed config."""
-    return jax.jit(partial(step_fn, cfg=cfg))
+@lru_cache(maxsize=None)
+def make_step(cfg: EngineConfig, dense: bool = False):
+    """Compile the engine step for a fixed config (and lowering mode).
+
+    Memoized on the (hashable) config so same-config summarizers — e.g.
+    the two sides of a differential test — share one compiled program.
+    """
+    return jax.jit(partial(step_fn, cfg=cfg, dense=dense))

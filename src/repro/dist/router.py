@@ -37,7 +37,12 @@ a two-stage software pipeline:
    chunk-novel keys, preserving exact assignment order.
 6. The shard runs ``ceil(max_count / batch)`` engine rounds, the round
    count agreed across shards with ``lax.pmax`` so every replica advances
-   its PRNG stream identically.
+   its PRNG stream identically.  The replicas stacked on one device are
+   laid out per ``replica_exec`` — one ``jax.vmap``-batched program over
+   the replica axis (possible because the trial engine is cond-free
+   predicated data flow) or a serializing ``lax.map`` — and the route
+   stage's drain-round count is folded into the stage's carried
+   telemetry on device (``telem += rounds - 1``).
 
 Because stage 1 depends only on the chunk (never on engine or intern
 state), ``ShardedSummarizer`` dispatches chunk k+1's routing — drain
@@ -80,6 +85,7 @@ inside the ``lax.while_loop`` body.
 """
 from __future__ import annotations
 
+import os
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -89,13 +95,46 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.engine.hashtable import HashTable, ht_find, ht_new, ht_set
 from repro.core.engine.state import EngineConfig, new_state
-from repro.core.engine.trial import step_fn
+from repro.core.engine.trial import pwhen, step_fn
 
 INVALID = jnp.int32(-1)
 
 # the device shard key is (h_hi * 2**31 + h_lo) % n_shards computed in
 # uint32 residues; (n-1)**2 + (n-1) must stay below 2**31
 MAX_SHARDS = 1 << 15
+
+# How engine/intern work is laid out over the shard replicas stacked on one
+# device (the n_shards > n_devices production path):
+#
+# * ``"vmap"`` — one batched program over the stacked replica axis.  The
+#   trial engine is cond-free predicated data flow
+#   (``core/engine/trial.py``), so vmap pays no both-branches penalty:
+#   its predicated regions are phased to carry scalars, not state.
+# * ``"map"`` — ``lax.map`` over replicas, serializing them per device
+#   but letting each replica's predicated regions short-circuit at
+#   runtime.  Also the differential reference (like ``routing="host"``):
+#   identical math, independent lowering, bit-identical states.
+#
+# The default is backend-aware: ``"vmap"`` on accelerator backends — the
+# deployment target, where replica lanes vectorize in hardware and a
+# future Pallas trial kernel slots in — and ``"map"`` on the XLA *CPU*
+# backend, where measurement (docs/KNOWN_ISSUES.md) shows every batched
+# ``while`` pays a fixed ~8us dispatch tax (vs <1us unbatched), taxing
+# the engine's probe loops and predicated regions ~3-5x over the mapped
+# lowering.  Both modes are leaf-bitwise state-identical, so the choice
+# is pure performance; REPRO_REPLICA_EXEC overrides (the CI router-stress
+# job uses it to cover both).
+REPLICA_EXEC_MODES = ("vmap", "map")
+DEFAULT_REPLICA_EXEC = os.environ.get(
+    "REPRO_REPLICA_EXEC",
+    "map" if jax.default_backend() == "cpu" else "vmap")
+
+
+def _replica_apply(fn, replica_exec: str, *stacked):
+    """Run ``fn`` across the leading (stacked-replica) axis of ``stacked``."""
+    if replica_exec == "vmap":
+        return jax.vmap(fn)(*stacked)
+    return jax.lax.map(lambda args: fn(*args), stacked)
 
 
 # --------------------------------------------------------------------------- #
@@ -141,7 +180,9 @@ def _intern_probe(ist: InternState, hi: jax.Array, lo: jax.Array,
 
     Returns ``-1`` when invalid or dropped at capacity.  The intern table
     keys are full-entropy label hashes, so probes start at the prehashed
-    position (no re-mix — see ``hashtable.ht_find``).
+    position (no re-mix — see ``hashtable.ht_find``).  Cond-free: the
+    insert is a masked write under ``take``, so the op vmaps over stacked
+    replicas without a both-branches (whole-table-select) penalty.
     """
     h1 = jnp.where(valid, hi, 0)
     h2 = jnp.where(valid, lo, 0)
@@ -151,15 +192,12 @@ def _intern_probe(ist: InternState, hi: jax.Array, lo: jax.Array,
     room = ist.n_nodes < n_cap
     take = fresh & room
     nid_new = ist.n_nodes
-
-    def ins(i: InternState) -> InternState:
-        return i._replace(
-            h2l=ht_set(i.h2l, h1, h2, nid_new, prehashed=True),
-            l2h=i.l2h.at[nid_new].set(jnp.stack([h1, h2])),
-            n_nodes=i.n_nodes + 1)
-
-    ist = jax.lax.cond(take, ins, lambda i: i, ist)
+    nid_w = jnp.minimum(nid_new, n_cap - 1)   # in-bounds slot for the write
     ist = ist._replace(
+        h2l=ht_set(ist.h2l, h1, h2, nid_new, prehashed=True, ok=take),
+        l2h=ist.l2h.at[nid_w].set(
+            jnp.where(take, jnp.stack([h1, h2]), ist.l2h[nid_w])),
+        n_nodes=ist.n_nodes + take.astype(jnp.int32),
         n_dropped=ist.n_dropped + (fresh & ~room).astype(jnp.int32))
     nid = jnp.where(found, existing, jnp.where(take, nid_new, INVALID))
     return ist, jnp.where(valid, nid, INVALID)
@@ -167,7 +205,7 @@ def _intern_probe(ist: InternState, hi: jax.Array, lo: jax.Array,
 
 def _intern_one(ist: InternState, hi: jax.Array, lo: jax.Array,
                 valid: jax.Array, pre_found: jax.Array, pre_slot: jax.Array,
-                n_cap: int) -> Tuple[InternState, jax.Array]:
+                n_cap: int, dense: bool) -> Tuple[InternState, jax.Array]:
     """One intern with a vectorized pre-lookup hint.
 
     ``pre_found``/``pre_slot`` come from a batch ``ht_find`` against the
@@ -175,23 +213,29 @@ def _intern_one(ist: InternState, hi: jax.Array, lo: jax.Array,
     EMPTY/TOMB slots — they never relocate existing entries — so a
     pre-found slot stays valid through the scan and the hit path is a
     single gather.  Only chunk-novel keys (or repeats of one) take the
-    sequential probe-and-insert path.
+    predicated probe-and-insert region — masked data flow when ``dense``
+    (the vmapped-replica lowering), a zero-cost ``pwhen`` short-circuit
+    on the all-hits steady state otherwise; never a ``lax.cond``.
     """
+    need = valid & ~pre_found
 
-    def hit(i: InternState):
-        return i, i.h2l.val[pre_slot]
+    def miss(carry):
+        ist, _ = carry
+        return _intern_probe(ist, hi, lo, need, n_cap)
 
-    def miss(i: InternState):
-        return _intern_probe(i, hi, lo, valid, n_cap)
-
-    ist, nid = jax.lax.cond(pre_found & valid, hit, miss, ist)
+    if dense:
+        ist, nid_miss = miss((ist, INVALID))
+    else:
+        ist, nid_miss = pwhen(need, miss, (ist, INVALID))
+    nid = jnp.where(pre_found & valid, ist.h2l.val[pre_slot], nid_miss)
     return ist, jnp.where(valid, nid, INVALID)
 
 
 def intern_changes(ist: InternState,
                    uh: jax.Array, ul: jax.Array,
                    vh: jax.Array, vl: jax.Array,
-                   n_cap: int) -> Tuple[InternState, jax.Array, jax.Array]:
+                   n_cap: int, dense: bool = False,
+                   ) -> Tuple[InternState, jax.Array, jax.Array]:
     """Intern a hashed change sequence in order: ``(ist, u_nid, v_nid)``.
 
     A change with a dropped endpoint (shard node capacity hit) maps to
@@ -213,8 +257,10 @@ def intern_changes(ist: InternState,
 
     def body(ist, ch):
         uh_i, ul_i, vh_i, vl_i, v_i, pfu_i, psu_i, pfv_i, psv_i = ch
-        ist, nu = _intern_one(ist, uh_i, ul_i, v_i, pfu_i, psu_i, n_cap)
-        ist, nv = _intern_one(ist, vh_i, vl_i, v_i, pfv_i, psv_i, n_cap)
+        ist, nu = _intern_one(ist, uh_i, ul_i, v_i, pfu_i, psu_i, n_cap,
+                              dense)
+        ist, nv = _intern_one(ist, vh_i, vl_i, v_i, pfv_i, psv_i, n_cap,
+                              dense)
         ok = (nu >= 0) & (nv >= 0)
         return ist, (jnp.where(ok, nu, INVALID), jnp.where(ok, nv, INVALID))
 
@@ -277,25 +323,29 @@ def _donate_argnums(*argnums: int) -> tuple:
 _STEP_CACHE: dict = {}
 
 
-def make_bucketed_step(cfg: EngineConfig, mesh):
+def make_bucketed_step(cfg: EngineConfig, mesh,
+                       replica_exec: str = DEFAULT_REPLICA_EXEC):
     """jit(shard_map) step consuming host-bucketed ``[n_shards, batch]``
     hash-word rounds.  Bucketing/packing happens on the host; interning and
-    the engine step run on device (``lax.map`` lays multiple shard replicas
-    per device, keeping the engine's control flow intact instead of paying
-    vmap's both-branches cost).  Memoized on ``(cfg, mesh)``."""
-    key = ("bucketed", cfg, mesh)
+    the engine step run on device, the per-device shard replicas laid out
+    by ``replica_exec`` — one vmapped program over the stacked replica axis
+    (default; the predicated engine pays no both-branches cost), or a
+    serializing ``lax.map`` (the differential reference).  Memoized on
+    ``(cfg, mesh, replica_exec)``."""
+    key = ("bucketed", cfg, mesh, replica_exec)
     if key in _STEP_CACHE:
         return _STEP_CACHE[key]
     axis = mesh.axis_names[0]
     est_specs, ist_specs = _state_specs(cfg, axis)
+    dense = replica_exec == "vmap"   # vmap lanes want pure data flow
 
-    def one(args):
-        est, ist, uh, ul, vh, vl, ins = args
-        ist, u, v = intern_changes(ist, uh, ul, vh, vl, cfg.n_cap)
-        return step_fn(est, u, v, ins != 0, cfg), ist
+    def one(est, ist, uh, ul, vh, vl, ins):
+        ist, u, v = intern_changes(ist, uh, ul, vh, vl, cfg.n_cap, dense)
+        return step_fn(est, u, v, ins != 0, cfg, dense), ist
 
     def local(est, ist, uh, ul, vh, vl, ins):
-        return jax.lax.map(one, (est, ist, uh, ul, vh, vl, ins))
+        return _replica_apply(one, replica_exec,
+                              est, ist, uh, ul, vh, vl, ins)
 
     fn = jax.jit(shard_map(
         local, mesh=mesh,
@@ -478,19 +528,29 @@ def make_route_step(mesh, n_shards: int, chunk: int, lane_cap: int,
 # --------------------------------------------------------------------------- #
 
 
-def make_engine_step(cfg: EngineConfig, mesh, n_shards: int, acc_cap: int):
+def make_engine_step(cfg: EngineConfig, mesh, n_shards: int, acc_cap: int,
+                     replica_exec: str = DEFAULT_REPLICA_EXEC):
     """Compile the state-carrying engine stage for routed buckets.
 
-    ``(est, ist, a_uh, a_ul, a_vh, a_vl, a_ins, counts) -> (est, ist)``:
-    interns each shard's ``[n_shards, acc_cap]`` bucket (delivery order ==
-    stream order) and runs ``pmax(ceil(max_count / batch))`` engine rounds
-    so every replica's PRNG advances in lockstep.  The engine/intern
+    ``(est, ist, telem, a_uh, a_ul, a_vh, a_vl, a_ins, counts, rounds)
+    -> (est, ist, telem)``: interns each shard's ``[n_shards, acc_cap]``
+    bucket (delivery order == stream order) and runs
+    ``pmax(ceil(max_count / batch))`` engine rounds so every replica's
+    PRNG advances in lockstep.  The shard replicas stacked on one device
+    are laid out by ``replica_exec``: one vmapped program over the replica
+    axis (default), or a serializing ``lax.map`` (the differential
+    reference).
+
+    ``telem`` is the carried routing telemetry (``int32[n_dev]``, equal
+    across devices): the stage folds the route stage's drain-round count
+    ``rounds`` into it on device (``telem += rounds - 1``), so the host
+    never buffers per-chunk round counts.  The engine/intern/telemetry
     states AND the bucket buffers are donated on non-CPU backends — the
     buckets are the pipeline's double buffer, consumed exactly once.
 
-    Memoized on ``(cfg, mesh, n_shards, acc_cap)``.
+    Memoized on ``(cfg, mesh, n_shards, acc_cap, replica_exec)``.
     """
-    key = ("engine", cfg, mesh, n_shards, acc_cap)
+    key = ("engine", cfg, mesh, n_shards, acc_cap, replica_exec)
     if key in _STEP_CACHE:
         return _STEP_CACHE[key]
     axis = mesh.axis_names[0]
@@ -498,17 +558,20 @@ def make_engine_step(cfg: EngineConfig, mesh, n_shards: int, acc_cap: int):
     n_loc = n_shards // n_dev
     b = cfg.batch
     est_specs, ist_specs = _state_specs(cfg, axis)
+    dense = replica_exec == "vmap"   # vmap lanes want pure data flow
 
-    def local(est, ist, a_uh, a_ul, a_vh, a_vl, a_ins, counts):
-        # est/ist stacked [n_loc, ...]; buckets [n_loc, acc_cap]
+    def local(est, ist, telem, a_uh, a_ul, a_vh, a_vl, a_ins, counts,
+              rounds):
+        # est/ist stacked [n_loc, ...]; buckets [n_loc, acc_cap];
+        # telem/rounds [1] (device-local slice of the [n_dev] array)
         # intern each shard's whole bucket up front — the same order host
         # bucketing interns in, so both paths assign identical local ids
-        def int_one(args):
-            ist_l, uh_l, ul_l, vh_l, vl_l = args
-            return intern_changes(ist_l, uh_l, ul_l, vh_l, vl_l, cfg.n_cap)
+        def int_one(ist_l, uh_l, ul_l, vh_l, vl_l):
+            return intern_changes(ist_l, uh_l, ul_l, vh_l, vl_l,
+                                  cfg.n_cap, dense)
 
-        ist, u_all, v_all = jax.lax.map(
-            int_one, (ist, a_uh, a_ul, a_vh, a_vl))
+        ist, u_all, v_all = _replica_apply(
+            int_one, replica_exec, ist, a_uh, a_ul, a_vh, a_vl)
 
         # one spare round of padding so dynamic_slice never clamps
         u_all = jnp.concatenate(
@@ -525,24 +588,26 @@ def make_engine_step(cfg: EngineConfig, mesh, n_shards: int, acc_cap: int):
         def round_body(carry):
             r, est = carry
 
-            def one(args):
-                est_l, u_l, v_l, i_l = args
+            def one(est_l, u_l, v_l, i_l):
                 us = jax.lax.dynamic_slice(u_l, (r * b,), (b,))
                 vs = jax.lax.dynamic_slice(v_l, (r * b,), (b,))
                 fs = jax.lax.dynamic_slice(i_l, (r * b,), (b,)) != 0
-                return step_fn(est_l, us, vs, fs, cfg)
+                return step_fn(est_l, us, vs, fs, cfg, dense)
 
-            return r + 1, jax.lax.map(one, (est, u_all, v_all, i_all))
+            return r + 1, _replica_apply(one, replica_exec,
+                                         est, u_all, v_all, i_all)
 
         _, est = jax.lax.while_loop(
             lambda c: c[0] < erounds, round_body, (jnp.int32(0), est))
-        return est, ist
+        # drain-round telemetry: extra exchange rounds beyond the first,
+        # accumulated device-side (rounds is mesh-uniform by construction)
+        return est, ist, telem + rounds - 1
 
     fn = jax.jit(shard_map(
         local, mesh=mesh,
-        in_specs=(est_specs, ist_specs) + (P(axis),) * 6,
-        out_specs=(est_specs, ist_specs), check_rep=False),
-        donate_argnums=_donate_argnums(0, 1, 2, 3, 4, 5, 6))
+        in_specs=(est_specs, ist_specs) + (P(axis),) * 8,
+        out_specs=(est_specs, ist_specs, P(axis)), check_rep=False),
+        donate_argnums=_donate_argnums(0, 1, 2, 3, 4, 5, 6, 7))
     _STEP_CACHE[key] = fn
     return fn
 

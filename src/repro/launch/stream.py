@@ -23,6 +23,7 @@ import time
 from repro.core.engine import (BatchedSummarizer, EngineConfig,
                                ShardedSummarizer)
 from repro.core.reference import ALGORITHMS
+from repro.dist.router import DEFAULT_REPLICA_EXEC, REPLICA_EXEC_MODES
 from repro.graph.streams import (barabasi_albert_edges, copying_model_edges,
                                  edges_to_fully_dynamic_stream,
                                  edges_to_insertion_stream)
@@ -70,6 +71,12 @@ def main() -> None:
                          "k+1's routing with chunk k's engine rounds "
                          "(measures the pipeline gap; results are "
                          "bit-identical)")
+    ap.add_argument("--replica-exec", choices=list(REPLICA_EXEC_MODES),
+                    default=DEFAULT_REPLICA_EXEC,
+                    help="sharded: lay the per-device shard replicas out "
+                         "as one vmapped program (default) or a "
+                         "serializing lax.map (the differential "
+                         "reference; results are bit-identical)")
     ap.add_argument("--algo", choices=list(ALGORITHMS), default="mosso")
     ap.add_argument("--graph", choices=["ba", "copying"], default="ba")
     ap.add_argument("--nodes", type=int, default=2000)
@@ -115,11 +122,13 @@ def main() -> None:
             n_shards=args.shards, routing=args.routing,
             router_chunk=args.router_chunk, lane_cap=args.lane_cap,
             max_drain_rounds=args.max_drain_rounds,
-            chunk_sync=args.chunk_sync, pipeline=not args.no_pipeline)
+            chunk_sync=args.chunk_sync, pipeline=not args.no_pipeline,
+            replica_exec=args.replica_exec)
         if args.routing == "device":
             print(f"router: lane_cap={ss.lane_cap} "
                   f"max_drain_rounds={ss.max_drain_rounds} "
-                  f"sync_free={ss.sync_free} pipeline={ss.pipeline}")
+                  f"sync_free={ss.sync_free} pipeline={ss.pipeline} "
+                  f"replica_exec={ss.replica_exec}")
         ss.run(stream)
         phi, m = ss.phi, ss.num_edges
         extra = str(ss.stats())

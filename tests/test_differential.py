@@ -8,6 +8,11 @@ standing verification bar for engine changes (ROADMAP open items).
 """
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # container has no hypothesis; deterministic shim
+    from repro.testing.proptest import given, settings, strategies as st
+
 from repro.core.engine import BatchedSummarizer, EngineConfig, ShardedSummarizer
 from repro.core.reference.dynamic_summary import DynamicSummary
 from repro.core.summary import pair_key
@@ -74,6 +79,83 @@ def test_differential_final_phi_within_band():
     assert 0 < bs.phi <= n_live
     assert ref.phi == n_live    # no moves: reference stays at trivial encoding
     assert bs.phi <= ref.phi    # the trial engine may only improve on trivial
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 9999), st.integers(2, 4))
+def test_predicated_step_matches_reference_batchwise_property(seed, deg):
+    """Property (PR 5): for any stream seed/density, the PREDICATED trial
+    engine — Alg. 1 as cond-free masked data flow — satisfies the Tier-A
+    reference contract batchwise: the phi invariant holds in both tiers
+    after every batch and both decode losslessly to the exact live edge
+    set.  One fixed config, so every example reuses one compiled step."""
+    edges = sbm_edges(28, deg, 0.5, 0.06, seed=seed)
+    stream = edges_to_fully_dynamic_stream(edges, delete_prob=0.2,
+                                           seed=seed + 1)
+    cfg = _cfg(n_cap=128, m_cap=1024, batch=8, c=6)
+    bs = BatchedSummarizer(cfg)
+    ref = DynamicSummary()
+    live = set()
+    for off in range(0, len(stream), cfg.batch):
+        chunk = stream[off:off + cfg.batch]
+        bs.process(chunk)
+        for (u, v, ins) in chunk:
+            e = (min(u, v), max(u, v))
+            if ins:
+                ref.insert(*e)
+                live.add(e)
+            else:
+                ref.delete(*e)
+                live.discard(e)
+        tag = f"seed={seed} off={off}"
+        ref_mat = ref.materialize()
+        assert ref.phi == ref_mat.phi == ref.phi_recomputed(), tag
+        eng_mat = bs.materialize()      # also asserts eab vs live edges
+        assert bs.phi == eng_mat.phi == bs.phi_recomputed(), tag
+        assert ref_mat.decode_edges() == live, tag
+        eng_live = {pair_key(bs._ids[u], bs._ids[v]) for (u, v) in live}
+        assert eng_mat.decode_edges() == eng_live, tag
+    assert live == ground_truth_edges(stream)
+
+
+def test_trial_engine_compiles_cond_free():
+    """Acceptance tripwire (PR 5): the lowered engine step must contain no
+    ``cond`` primitive at any nesting depth — predication (masked writes +
+    0/1-trip while regions) is the only control flow besides scan/while."""
+    import numpy as np
+
+    import jax
+    from repro.core.engine.state import new_state
+    from repro.core.engine.trial import step_fn
+
+    cfg = _cfg(n_cap=64, m_cap=256, d_cap=8, sn_cap=8, c=3, batch=4)
+
+    def subjaxprs(val):
+        import jax.core as jc
+        if isinstance(val, jc.ClosedJaxpr):
+            return [val.jaxpr]
+        if isinstance(val, jc.Jaxpr):
+            return [val]
+        if isinstance(val, (list, tuple)):
+            return [s for v in val for s in subjaxprs(v)]
+        return []
+
+    def count_conds(jaxpr):
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "cond":
+                n += 1
+            for val in eqn.params.values():
+                for sub in subjaxprs(val):
+                    n += count_conds(sub)
+        return n
+
+    u = np.zeros(4, np.int32)
+    for dense in (False, True):
+        closed = jax.make_jaxpr(
+            lambda s, a, b, c: step_fn(s, a, b, c, cfg, dense))(
+                new_state(cfg), u, u + 1, u > 0)
+        assert count_conds(closed.jaxpr) == 0, f"cond found (dense={dense})"
 
 
 def test_sharded_summarizer_matches_ground_truth_single_device():

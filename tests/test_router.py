@@ -466,6 +466,65 @@ def test_pipelined_skew_drain_8_fake_devices_subprocess():
     assert "OK" in out.stdout
 
 
+# --------------------------------------------------------------------------- #
+# vmapped shard replicas (predicated trial engine, PR 5)
+# --------------------------------------------------------------------------- #
+
+
+def test_replica_exec_vmap_vs_map_vs_host_bitwise_on_key_skew():
+    """replica_exec is a pure lowering change: under forced key skew with
+    multi-round drains, the vmapped replica layout, the lax.map layout,
+    and host routing (through the vmapped bucketed step) produce
+    leaf-bitwise identical engine AND intern states — the strongest
+    statement that batching replicas changes no PRNG draw, no intern
+    order, and no trial outcome."""
+    stream = _skew_stream(60)
+    cfg = _cfg()
+    kw = dict(n_shards=2, router_chunk=64)
+    vm = ShardedSummarizer(cfg, routing="device", lane_cap=2,
+                           replica_exec="vmap", **kw)
+    mp = ShardedSummarizer(cfg, routing="device", lane_cap=2,
+                           replica_exec="map", **kw)
+    host = ShardedSummarizer(cfg, routing="host", replica_exec="vmap", **kw)
+    assert vm.replica_exec == "vmap" and mp.replica_exec == "map"
+    for off in range(0, len(stream), 64):
+        vm.process(stream[off:off + 64])
+        mp.process(stream[off:off + 64])
+        host.process(stream[off:off + 64])
+    assert vm.stats()["router_drain_rounds"] >= 2   # genuinely multi-round
+    for other in (mp, host):
+        assert vm.shard_phis() == other.shard_phis()
+        for a, b in zip(vm.host_states(), other.host_states()):
+            for name, al, bl in zip(a._fields, a, b):
+                np.testing.assert_array_equal(
+                    np.asarray(al), np.asarray(bl), err_msg=name)
+        for a, b in zip(vm.host_interns(), other.host_interns()):
+            assert int(a.n_nodes) == int(b.n_nodes)
+            np.testing.assert_array_equal(np.asarray(a.l2h),
+                                          np.asarray(b.l2h))
+    truth = ground_truth_edges(stream)
+    assert vm.live_edges() == truth
+    assert vm.materialize().decode_edges() == truth
+
+
+def test_replica_exec_default_is_backend_aware_and_validated():
+    """The resolved default must be a legal mode (vmap on accelerators,
+    map on the XLA CPU backend — see repro/dist/router.py), and an unknown
+    mode must fail fast."""
+    import jax
+
+    from repro.dist.router import DEFAULT_REPLICA_EXEC, REPLICA_EXEC_MODES
+
+    assert DEFAULT_REPLICA_EXEC in REPLICA_EXEC_MODES
+    if jax.default_backend() == "cpu" and "REPRO_REPLICA_EXEC" not in \
+            __import__("os").environ:
+        assert DEFAULT_REPLICA_EXEC == "map"
+    ss = ShardedSummarizer(_cfg(), n_shards=2, router_chunk=64)
+    assert ss.replica_exec == DEFAULT_REPLICA_EXEC
+    with pytest.raises(ValueError, match="replica_exec"):
+        ShardedSummarizer(_cfg(), n_shards=2, replica_exec="pmap")
+
+
 def test_label_buffer_compacts_on_long_zero_sync_runs():
     """A dispatch-only run must not buffer every label occurrence until
     the next sync: the buffer compacts to unique hashes every 64 chunks
