@@ -171,6 +171,11 @@ def router_throughput(n_nodes: int = 700, deg: int = 4, n_shards: int = 2,
       replicas stacked per device batched as ONE vmapped engine program.
     * ``device-vmapped`` — ``replica_exec="vmap"`` pinned explicitly (the
       default today; the row stays meaningful if the default ever moves).
+    * ``device-vmapped-pallas`` — the vmapped replica layout with the
+      batched probes fused into the Pallas kernel
+      (``trial_backend="pallas"``; interpret mode on CPU, where the
+      kernel inlines into the XLA program — the row tracks how the
+      accelerator-native layout fares with the while-dispatch count cut).
     * ``device-map`` — ``replica_exec="map"``: replicas serialized per
       device by ``lax.map``, the replica-layout differential reference;
       the delta against ``device-vmapped`` is the replica-parallelism win.
@@ -194,6 +199,9 @@ def router_throughput(n_nodes: int = 700, deg: int = 4, n_shards: int = 2,
                        c=16, batch=64, escape=0.2)
     modes = (("device", dict(routing="device")),
              ("device-vmapped", dict(routing="device", replica_exec="vmap")),
+             ("device-vmapped-pallas",
+              dict(routing="device", replica_exec="vmap",
+                   trial_backend="pallas")),
              ("device-map", dict(routing="device", replica_exec="map")),
              ("device-serial", dict(routing="device", pipeline=False)),
              ("device-synced", dict(routing="device", chunk_sync=True)),
@@ -235,6 +243,9 @@ def router_throughput(n_nodes: int = 700, deg: int = 4, n_shards: int = 2,
     rows.append(("router/replica_vmap_gain", us["device-vmapped"],
                  f"map_over_vmapped="
                  f"{us['device-map']/max(us['device-vmapped'],1e-9):.2f}x"))
+    rows.append(("router/probe_kernel_gain", us["device-vmapped-pallas"],
+                 f"xla_over_pallas="
+                 f"{us['device-vmapped']/max(us['device-vmapped-pallas'],1e-9):.2f}x"))
     rows.append(("router/pipeline_gain", us["device"],
                  f"serial_over_pipelined="
                  f"{us['device-serial']/max(us['device'],1e-9):.2f}x"))
@@ -246,11 +257,74 @@ def router_throughput(n_nodes: int = 700, deg: int = 4, n_shards: int = 2,
     return rows
 
 
+def probe_microbench(cap: int = 4096, batch: int = 256,
+                     iters: int = 200) -> List[Row]:
+    """Beyond-paper: the trial step's dominant inner loop in isolation.
+
+    One batch of ``ht_find`` probes against a loaded table, measured as
+    (a) the XLA lowering (vmapped ``lax.while_loop``, one batched while
+    dispatch per call — the per-trial shape every trial phase and the
+    intern pre-lookup pays today) vs (b) one fused Pallas probe-kernel
+    launch (interpret mode on CPU, where the kernel body inlines into the
+    XLA program — the row tracks the *dispatch-count* delta; the compiled
+    kernel's arithmetic win only shows on an accelerator backend).
+    Both paths run under jit on identical inputs; bitwise agreement is
+    asserted before the clock starts.
+    """
+    import numpy as np
+
+    import jax
+    import jax.numpy as jnp
+    from repro.core.engine.hashtable import (ht_lookup_batch, ht_new,
+                                             ht_set, trial_backend_scope)
+
+    rng = np.random.default_rng(0)
+    ht = ht_new(cap)
+    keys = np.unique(
+        rng.integers(0, 8 * cap, size=(cap // 2, 2)).astype(np.int32),
+        axis=0)
+    for i, (a, b) in enumerate(keys):
+        ht = ht_set(ht, int(a), int(b), i + 1)
+    q = np.concatenate([keys[:batch // 2],
+                        rng.integers(0, 8 * cap, size=(batch // 2, 2))
+                        ]).astype(np.int32)
+    q1, q2 = jnp.asarray(q[:, 0]), jnp.asarray(q[:, 1])
+
+    def make(backend):
+        @jax.jit
+        def f(t, a, b):
+            with trial_backend_scope(backend):
+                return ht_lookup_batch(t, a, b, default=-1)
+        return f
+
+    fns = {f"probe/{n}": make(n) for n in ("xla", "pallas")}
+    outs = {n: f(ht, q1, q2).block_until_ready() for n, f in fns.items()}
+    assert (np.asarray(outs["probe/xla"])
+            == np.asarray(outs["probe/pallas"])).all(), "probe drift"
+
+    rows: List[Row] = []
+    us = {}
+    for name, f in fns.items():
+        t0 = time.time()
+        for _ in range(iters):
+            out = f(ht, q1, q2)
+        out.block_until_ready()
+        us[name] = 1e6 * (time.time() - t0) / iters
+        rows.append((name, us[name], f"cap={cap} batch={batch}"))
+    rows.append(("probe/kernel_gain", us["probe/pallas"],
+                 f"xla_over_pallas="
+                 f"{us['probe/xla']/max(us['probe/pallas'],1e-9):.2f}x"))
+    return rows
+
+
 def smoke() -> List[Row]:
     """Tiny-config subset for CI: exercises both routing modes end to end
-    (including the lockstep phi assertion) in well under a minute."""
-    return router_throughput(n_nodes=120, deg=3, n_shards=2, chunk=128)
+    (including the lockstep phi assertion) plus the probe microbenchmark
+    in well under a minute."""
+    return (router_throughput(n_nodes=120, deg=3, n_shards=2, chunk=128)
+            + probe_microbench(cap=1024, batch=128, iters=50))
 
 
 ALL = [fig4_speed, fig5_compression, fig1c_scalability, fig6_parameters,
-       fig7a_graph_properties, engine_throughput, router_throughput]
+       fig7a_graph_properties, engine_throughput, router_throughput,
+       probe_microbench]

@@ -134,16 +134,26 @@ class BatchedSummarizer:
     labels ever seen (asserted at interning time) and ``m_cap`` live edges
     (a table-sizing contract, unchecked — see :class:`EngineConfig`).
     Scale past either with :class:`ShardedSummarizer`.
+
+    **Probe backend.** ``trial_backend`` selects how the step's batched
+    hash-table probes lower: ``"xla"`` (vmapped while loops, the
+    differential reference) or ``"pallas"`` (one fused kernel launch per
+    probe batch, ``repro.kernels.ht_probe``; interpret mode off-TPU).
+    ``None`` defers to the ``REPRO_TRIAL_BACKEND`` env default.  Both
+    backends are leaf-bitwise state-identical on identical streams.
     """
 
-    def __init__(self, cfg: EngineConfig | None = None, **overrides) -> None:
+    def __init__(self, cfg: EngineConfig | None = None, *,
+                 trial_backend: str | None = None, **overrides) -> None:
+        from repro.core.engine.hashtable import resolve_trial_backend
         if cfg is None:
             cfg = EngineConfig(**overrides)
         elif overrides:
             cfg = dataclasses.replace(cfg, **overrides)
         self.cfg = cfg
+        self.trial_backend = resolve_trial_backend(trial_backend)
         self.state: EngineState = new_state(cfg)
-        self._step = make_step(cfg)
+        self._step = make_step(cfg, trial_backend=self.trial_backend)
         self._ids: Dict[object, int] = {}
         self._rev: List[object] = []
 
@@ -307,6 +317,14 @@ class ShardedSummarizer:
     where batched control flow carries a measured fixed dispatch tax
     (see docs/KNOWN_ISSUES.md).  ``REPRO_REPLICA_EXEC`` overrides.
 
+    **Probe backend** (``trial_backend=``): how the engine's batched
+    hash-table probes (trial lookups + the router's intern pre-lookup)
+    lower — ``"xla"`` (vmapped while loops; the default and the
+    differential reference) or ``"pallas"`` (one fused
+    ``repro.kernels.ht_probe`` launch per batch; interpret mode off-TPU).
+    ``REPRO_TRIAL_BACKEND`` sets the process default; both backends are
+    leaf-bitwise state-identical.
+
     **Routing telemetry.** ``router_syncs`` counts per-chunk watermark
     fetches (0 when ``sync_free``), ``router_host_dict_ops`` counts
     label-map mutations performed inside dispatch (0 on the hash-routed
@@ -337,6 +355,7 @@ class ShardedSummarizer:
                  chunk_sync: bool = False,
                  pipeline: bool = True,
                  replica_exec: Optional[str] = None,
+                 trial_backend: Optional[str] = None,
                  **overrides) -> None:
         import math
 
@@ -357,6 +376,8 @@ class ShardedSummarizer:
                 f"replica_exec must be one of "
                 f"{dist_router.REPLICA_EXEC_MODES}: {replica_exec}")
         self.replica_exec = replica_exec
+        from repro.core.engine.hashtable import resolve_trial_backend
+        self.trial_backend = resolve_trial_backend(trial_backend)
         if mesh is None:
             from repro.launch.mesh import make_engine_mesh
             if n_shards is None:
@@ -393,15 +414,15 @@ class ShardedSummarizer:
         # drain-round telemetry lives IN the engine stage's carried state
         # (int32[n_dev], accumulated on device, fetched only at sync points)
         self._drain_rounds = jnp.zeros((n_dev,), jnp.int32)
-        self._bucketed = dist_router.make_bucketed_step(cfg, mesh,
-                                                        replica_exec)
+        self._bucketed = dist_router.make_bucketed_step(
+            cfg, mesh, replica_exec, self.trial_backend)
         if routing == "device":
             self._route, self.router_geometry = dist_router.make_route_step(
                 mesh, self.n_shards, self.router_chunk, self.lane_cap,
                 max_drain_rounds)
             self._engine = dist_router.make_engine_step(
                 cfg, mesh, self.n_shards, self.router_geometry.acc_cap,
-                replica_exec)
+                replica_exec, self.trial_backend)
             self.lane_cap = self.router_geometry.lane_cap
             self.max_drain_rounds = self.router_geometry.max_drain_rounds
             # delivery statically guaranteed -> the overflow watermark never

@@ -21,13 +21,59 @@ nothing is committed.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+import os
+from contextlib import contextmanager
+from typing import List, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
 EMPTY = jnp.int32(-1)
 TOMB = jnp.int32(-2)
+
+# ---------------------------------------------------------------------- #
+# batched-probe backend switch
+# ---------------------------------------------------------------------- #
+#
+# Batched probes — the trial engine's lookups and the router's intern
+# pre-lookup — lower in one of two ways:
+#
+# * ``"xla"`` (default) — ``jax.vmap`` over the scalar probe loops below:
+#   one batched ``lax.while_loop`` per call site.  The differential
+#   reference, and the only compiled path on CPU.
+# * ``"pallas"`` — one fused kernel launch per batch
+#   (``repro.kernels.ht_probe``), bit-identical by contract; on the CPU
+#   backend it runs in Pallas interpret mode (inlined into the XLA
+#   program), so CI can exercise the kernel path end to end.
+#
+# The backend is resolved at TRACE time: callers that compile a step enter
+# :func:`trial_backend_scope` inside the to-be-jitted function body (see
+# ``trial.make_step`` / ``dist.router``), so the scope is active while the
+# probe call sites trace and each compiled program bakes in exactly one
+# backend.  ``REPRO_TRIAL_BACKEND`` sets the process-wide default.
+TRIAL_BACKENDS = ("xla", "pallas")
+_BACKEND_STACK: List[str] = []
+
+
+def resolve_trial_backend(backend: str | None = None) -> str:
+    """The effective probe backend: explicit arg > active scope > env."""
+    if backend is None:
+        backend = (_BACKEND_STACK[-1] if _BACKEND_STACK
+                   else os.environ.get("REPRO_TRIAL_BACKEND", "xla"))
+    if backend not in TRIAL_BACKENDS:
+        raise ValueError(
+            f"trial backend must be one of {TRIAL_BACKENDS}: {backend!r}")
+    return backend
+
+
+@contextmanager
+def trial_backend_scope(backend: str | None):
+    """Pin the batched-probe backend for call sites traced in this scope."""
+    _BACKEND_STACK.append(resolve_trial_backend(backend))
+    try:
+        yield _BACKEND_STACK[-1]
+    finally:
+        _BACKEND_STACK.pop()
 
 
 class HashTable(NamedTuple):
@@ -105,10 +151,42 @@ def ht_lookup(ht: HashTable, k1, k2, default=0) -> jax.Array:
     return jnp.where(found, ht.val[slot], jnp.int32(default))
 
 
+def _probe_batch(ht: HashTable, k1: jax.Array, k2: jax.Array,
+                 prehashed: bool, backend: str | None,
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Backend dispatch for a batch of find-probes: (slot, found, val).
+
+    ``val`` is the value at the key's chain-end slot — garbage when
+    ``~found``; callers select against their own default.  Both backends
+    are leaf-bitwise identical (tests/test_kernels.py sweeps this).
+    """
+    k1 = jnp.asarray(k1, jnp.int32)
+    k2 = jnp.asarray(k2, jnp.int32)
+    if resolve_trial_backend(backend) == "pallas":
+        # lazy import: the kernels layer imports this module for the
+        # probe-sequence constants, so the dependency cannot be top-level
+        from repro.kernels import ops as _kops
+        return _kops.ht_probe(ht.k1, ht.k2, ht.val, k1, k2,
+                              prehashed=prehashed, mode="find")
+    slot, found = jax.vmap(
+        lambda a, b: ht_find(ht, a, b, prehashed=prehashed))(k1, k2)
+    return slot, found, ht.val[slot]
+
+
+def ht_find_batch(ht: HashTable, k1: jax.Array, k2: jax.Array,
+                  prehashed: bool = False, backend: str | None = None,
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Batched :func:`ht_find`: (slot, found) per query, one fused probe
+    pass under the active trial backend."""
+    slot, found, _ = _probe_batch(ht, k1, k2, prehashed, backend)
+    return slot, found
+
+
 def ht_lookup_batch(ht: HashTable, k1: jax.Array, k2: jax.Array,
-                    default=0) -> jax.Array:
-    """Vectorized read-only lookups (vmap over the probe loop)."""
-    return jax.vmap(lambda a, b: ht_lookup(ht, a, b, default))(k1, k2)
+                    default=0, backend: str | None = None) -> jax.Array:
+    """Vectorized read-only lookups under the active trial backend."""
+    _, found, val = _probe_batch(ht, k1, k2, False, backend)
+    return jnp.where(found, val, jnp.int32(default))
 
 
 def _find_insert_slot(ht: HashTable, k1, k2,

@@ -48,13 +48,15 @@ sequential in both modes.
 """
 from __future__ import annotations
 
-from functools import lru_cache, partial
+from functools import lru_cache
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine.hashtable import ht_lookup_batch
+from repro.core.engine.hashtable import (ht_lookup_batch,
+                                         resolve_trial_backend,
+                                         trial_backend_scope)
 from repro.core.engine.ops import (alloc_sid, apply_move, delete_edge,
                                    delta_phi_move, insert_edge, rnd_below,
                                    rnd_u01, rnd_u32)
@@ -245,10 +247,26 @@ def step_fn(st: EngineState, u: jax.Array, v: jax.Array, ins: jax.Array,
 
 
 @lru_cache(maxsize=None)
-def make_step(cfg: EngineConfig, dense: bool = False):
+def _make_step(cfg: EngineConfig, dense: bool, trial_backend: str):
+    # the backend scope is entered INSIDE the jitted body: jit traces
+    # lazily at first call, and the scope must be active while the
+    # batched-probe call sites trace so the compiled program bakes in
+    # exactly the requested backend
+    def stepped(st, u, v, ins):
+        with trial_backend_scope(trial_backend):
+            return step_fn(st, u, v, ins, cfg, dense)
+
+    return jax.jit(stepped)
+
+
+def make_step(cfg: EngineConfig, dense: bool = False,
+              trial_backend: str | None = None):
     """Compile the engine step for a fixed config (and lowering mode).
 
-    Memoized on the (hashable) config so same-config summarizers — e.g.
-    the two sides of a differential test — share one compiled program.
+    Memoized on the (hashable) config — plus the lowering mode and the
+    resolved batched-probe backend (``trial_backend``: explicit arg >
+    active scope > ``REPRO_TRIAL_BACKEND`` env > ``"xla"``) — so
+    same-config summarizers, e.g. the two sides of a differential test,
+    share one compiled program per backend.
     """
-    return jax.jit(partial(step_fn, cfg=cfg, dense=dense))
+    return _make_step(cfg, dense, resolve_trial_backend(trial_backend))

@@ -93,7 +93,10 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.core.engine.hashtable import HashTable, ht_find, ht_new, ht_set
+from repro.core.engine.hashtable import (HashTable, ht_find, ht_find_batch,
+                                         ht_new, ht_set,
+                                         resolve_trial_backend,
+                                         trial_backend_scope)
 from repro.core.engine.state import EngineConfig, new_state
 from repro.core.engine.trial import pwhen, step_fn
 
@@ -247,10 +250,12 @@ def intern_changes(ist: InternState,
     valid = (uh >= 0) & (vh >= 0)
 
     def batch_find(hi, lo):
+        # masked lanes probe key (0, 0) — the garbage-key side of the
+        # predication contract; under the pallas backend the whole
+        # pre-lookup is one fused probe launch (kernels/ht_probe.py)
         h1 = jnp.where(valid, hi, 0)
         h2 = jnp.where(valid, lo, 0)
-        return jax.vmap(
-            lambda a, b: ht_find(ist.h2l, a, b, prehashed=True))(h1, h2)
+        return ht_find_batch(ist.h2l, h1, h2, prehashed=True)
 
     psu, pfu = batch_find(uh, ul)
     psv, pfv = batch_find(vh, vl)
@@ -324,15 +329,19 @@ _STEP_CACHE: dict = {}
 
 
 def make_bucketed_step(cfg: EngineConfig, mesh,
-                       replica_exec: str = DEFAULT_REPLICA_EXEC):
+                       replica_exec: str = DEFAULT_REPLICA_EXEC,
+                       trial_backend: Optional[str] = None):
     """jit(shard_map) step consuming host-bucketed ``[n_shards, batch]``
     hash-word rounds.  Bucketing/packing happens on the host; interning and
     the engine step run on device, the per-device shard replicas laid out
     by ``replica_exec`` — one vmapped program over the stacked replica axis
     (default; the predicated engine pays no both-branches cost), or a
-    serializing ``lax.map`` (the differential reference).  Memoized on
-    ``(cfg, mesh, replica_exec)``."""
-    key = ("bucketed", cfg, mesh, replica_exec)
+    serializing ``lax.map`` (the differential reference).  Batched probes
+    lower per ``trial_backend`` (resolved against the
+    ``REPRO_TRIAL_BACKEND`` default).  Memoized on
+    ``(cfg, mesh, replica_exec, trial_backend)``."""
+    trial_backend = resolve_trial_backend(trial_backend)
+    key = ("bucketed", cfg, mesh, replica_exec, trial_backend)
     if key in _STEP_CACHE:
         return _STEP_CACHE[key]
     axis = mesh.axis_names[0]
@@ -344,8 +353,11 @@ def make_bucketed_step(cfg: EngineConfig, mesh,
         return step_fn(est, u, v, ins != 0, cfg, dense), ist
 
     def local(est, ist, uh, ul, vh, vl, ins):
-        return _replica_apply(one, replica_exec,
-                              est, ist, uh, ul, vh, vl, ins)
+        # scope entered inside the traced body: the probe call sites bake
+        # in the backend while this function traces under jit
+        with trial_backend_scope(trial_backend):
+            return _replica_apply(one, replica_exec,
+                                  est, ist, uh, ul, vh, vl, ins)
 
     fn = jax.jit(shard_map(
         local, mesh=mesh,
@@ -529,7 +541,8 @@ def make_route_step(mesh, n_shards: int, chunk: int, lane_cap: int,
 
 
 def make_engine_step(cfg: EngineConfig, mesh, n_shards: int, acc_cap: int,
-                     replica_exec: str = DEFAULT_REPLICA_EXEC):
+                     replica_exec: str = DEFAULT_REPLICA_EXEC,
+                     trial_backend: Optional[str] = None):
     """Compile the state-carrying engine stage for routed buckets.
 
     ``(est, ist, telem, a_uh, a_ul, a_vh, a_vl, a_ins, counts, rounds)
@@ -548,9 +561,12 @@ def make_engine_step(cfg: EngineConfig, mesh, n_shards: int, acc_cap: int,
     states AND the bucket buffers are donated on non-CPU backends — the
     buckets are the pipeline's double buffer, consumed exactly once.
 
-    Memoized on ``(cfg, mesh, n_shards, acc_cap, replica_exec)``.
+    Memoized on ``(cfg, mesh, n_shards, acc_cap, replica_exec,
+    trial_backend)``.
     """
-    key = ("engine", cfg, mesh, n_shards, acc_cap, replica_exec)
+    trial_backend = resolve_trial_backend(trial_backend)
+    key = ("engine", cfg, mesh, n_shards, acc_cap, replica_exec,
+           trial_backend)
     if key in _STEP_CACHE:
         return _STEP_CACHE[key]
     axis = mesh.axis_names[0]
@@ -560,8 +576,14 @@ def make_engine_step(cfg: EngineConfig, mesh, n_shards: int, acc_cap: int,
     est_specs, ist_specs = _state_specs(cfg, axis)
     dense = replica_exec == "vmap"   # vmap lanes want pure data flow
 
-    def local(est, ist, telem, a_uh, a_ul, a_vh, a_vl, a_ins, counts,
-              rounds):
+    def local(est, ist, telem, *bucket_args):
+        # probe backend baked in at trace time (same idiom as the
+        # bucketed step)
+        with trial_backend_scope(trial_backend):
+            return _local(est, ist, telem, *bucket_args)
+
+    def _local(est, ist, telem, a_uh, a_ul, a_vh, a_vl, a_ins, counts,
+               rounds):
         # est/ist stacked [n_loc, ...]; buckets [n_loc, acc_cap];
         # telem/rounds [1] (device-local slice of the [n_dev] array)
         # intern each shard's whole bucket up front — the same order host

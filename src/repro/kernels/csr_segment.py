@@ -39,22 +39,29 @@ def _kernel(row_off_ref, senders_ref, dst_loc_ref, x_ref, out_ref, *,
     stop = row_off_ref[ib + 1]
 
     acc0 = jnp.full((bn, bf), _INIT[reduce], dtype=jnp.float32)
+    cnt0 = jnp.zeros((bn, 1), dtype=jnp.int32)
 
-    def body(e, acc):
+    def body(e, carry):
+        acc, cnt = carry
         src = senders_ref[e]
         loc = dst_loc_ref[e]
         row = pl.load(x_ref, (pl.dslice(src, 1), slice(None)))  # [1, bf]
         onehot = (jax.lax.iota(jnp.int32, bn) == loc)[:, None]  # [bn, 1]
+        cnt = cnt + onehot.astype(jnp.int32)
         if reduce == "sum":
-            return acc + jnp.where(onehot, row, 0.0)
+            return acc + jnp.where(onehot, row, 0.0), cnt
         upd = jnp.where(onehot, row, _INIT[reduce])
         if reduce == "min":
-            return jnp.minimum(acc, upd)
-        return jnp.maximum(acc, upd)
+            return jnp.minimum(acc, upd), cnt
+        return jnp.maximum(acc, upd), cnt
 
-    acc = jax.lax.fori_loop(start, stop, body, acc0)
+    acc, cnt = jax.lax.fori_loop(start, stop, body, (acc0, cnt0))
     if reduce != "sum":
-        acc = jnp.where(jnp.isfinite(acc), acc, 0.0)
+        # zero EMPTY rows only (rows with zero in-edges keep the ±inf
+        # init); an isfinite mask would also clobber ±inf inputs, which
+        # must flow through min/max exactly as segment_reduce_ref keeps
+        # them
+        acc = jnp.where(cnt > 0, acc, 0.0)
     out_ref[...] = acc.astype(out_ref.dtype)
 
 

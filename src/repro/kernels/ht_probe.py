@@ -1,0 +1,173 @@
+"""Pallas kernel: batched open-addressing hash-table probes (trial hot loop).
+
+MoSSo's per-change budget is dominated by hash-table probe chains: every
+trial phase (TP sampling, neighbor slots, the closed-form dphi's E_AX /
+E_BX lookups) and the router's intern pre-lookup issue *batches* of
+independent probes against one table, and the XLA lowering
+(`core/engine/hashtable.ht_find` under `jax.vmap`) dispatches each batch
+as a batched `lax.while_loop` — on CPU that pays the measured fixed
+dispatch tax per loop (docs/KNOWN_ISSUES.md), and on accelerators it
+round-trips HBM per probe step.
+
+This kernel fuses one whole probe batch into a single launch:
+
+* the table arrays (``k1``/``k2``/``val``, ``int32[cap]``) are resident
+  for the duration of the launch (VMEM on TPU — capacities are sized in
+  the tens of KBs; the compiler places ``pl.ANY`` operands),
+* each program instance owns a *block of lanes* (one probe chain per
+  lane, the vmapped-replica layout's native shape),
+* all lanes advance through ONE uniform ``lax.while_loop`` — per-lane
+  state is a (frozen-when-done) probe offset, so there is no per-lane
+  control flow, exactly the predication style of the trial engine, and
+* results are committed as masked slot writes: a lane's output freezes
+  the step its chain terminates, and padding lanes (the ``ok=False``
+  contract: masked callers may feed garbage keys) probe like any other
+  lane — chains always terminate (EMPTY or full wrap after ``cap``
+  steps) and the caller ignores their slots.
+
+**Bitwise contract.**  For identical inputs the kernel must produce
+slot/found/value triples *bitwise identical* to the while-loop lowering
+(`kernels/ref.ht_probe_ref`, which wraps the `hashtable.py` loops) — the
+probe sequence IS the on-device table layout, so "close" is meaningless.
+`tests/test_kernels.py` sweeps capacities, load factors, tombstone
+densities, garbage keys, and full-chain wrap-arounds in interpret mode.
+
+`mode="find"` reproduces :func:`~repro.core.engine.hashtable.ht_find`
+(stop at key or EMPTY); `mode="insert"` reproduces
+:func:`~repro.core.engine.hashtable._find_insert_slot` (the upsert
+two-pass: the key's slot if present, else the first EMPTY/TOMB slot).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.engine.hashtable import EMPTY, TOMB, _probe_start
+
+# sentinel keys as python ints: jnp scalars would be captured as kernel
+# constants, which pallas_call rejects
+_EMPTY = int(EMPTY)
+_TOMB = int(TOMB)
+
+# lanes per program instance: one VPU lane row on TPU; small batches pad
+# up to one block, large batches tile the grid.
+DEFAULT_BLOCK = 128
+
+
+def _probe_kernel(k1_ref, k2_ref, val_ref, q1_ref, q2_ref,
+                  slot_ref, found_ref, val_out_ref, *,
+                  cap: int, mode: str, prehashed: bool):
+    """One block of probe chains, advanced by a single uniform while loop.
+
+    Loop semantics mirror the scalar ``hashtable.py`` loops exactly: a
+    lane's offset ``i`` advances while the scalar loop's condition holds
+    and freezes forever once it fails (masked update — the lane's "done"
+    bit is the predicate), so the final per-lane offset is the first
+    ``i`` where the scalar loop would have stopped.  The loop itself
+    runs until every lane froze: max-chain-length trips, no per-lane
+    control flow.
+    """
+    tk1 = k1_ref[...]          # int32[cap], launch-resident
+    tk2 = k2_ref[...]
+    tv = val_ref[...]
+    q1 = q1_ref[...]           # int32[1, bl]
+    q2 = q2_ref[...]
+    start = _probe_start(q1, q2, cap, prehashed)
+
+    def chain(stop_fn):
+        """First probe offset per lane where ``stop_fn(slot keys)`` holds
+        (or the ``i == cap`` wrap bound is hit) — vectorized pass over the
+        block, bit-equal to the scalar while loops."""
+
+        def cond(c):
+            return jnp.any(~c[1])
+
+        def body(c):
+            i, done = c
+            slot = (start + i) & (cap - 1)
+            stop = stop_fn(tk1[slot], tk2[slot]) | (i >= cap)
+            done_now = done | stop
+            return jnp.where(done_now, i, i + 1), done_now
+
+        i0 = jnp.zeros_like(start)
+        i, _ = jax.lax.while_loop(cond, body,
+                                  (i0, jnp.zeros(i0.shape, bool)))
+        return i
+
+    # pass 1: the key's chain — stop at the key itself or at EMPTY
+    i1 = chain(lambda k1s, k2s: ((k1s == q1) & (k2s == q2))
+               | (k1s == _EMPTY))
+    slot1 = (start + i1) & (cap - 1)
+    found = (tk1[slot1] == q1) & (tk2[slot1] == q2)
+
+    if mode == "find":
+        slot = slot1
+    else:
+        # pass 2 (upsert): first free (EMPTY or TOMB) slot; only read
+        # when the key was absent
+        i2 = chain(lambda k1s, k2s: (k1s == _EMPTY) | (k1s == _TOMB))
+        slot2 = (start + i2) & (cap - 1)
+        slot = jnp.where(found, slot1, slot2)
+
+    slot_ref[...] = slot
+    found_ref[...] = found.astype(jnp.int32)
+    val_out_ref[...] = tv[slot1]
+
+
+def ht_probe_batch(tk1: jax.Array, tk2: jax.Array, tval: jax.Array,
+                   q1: jax.Array, q2: jax.Array, *,
+                   prehashed: bool = False, mode: str = "find",
+                   block: int = DEFAULT_BLOCK, interpret: bool = False,
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Probe a batch of keys against one table in a single kernel launch.
+
+    Args: table arrays ``int32[cap]`` (``cap`` a power of two) and flat
+    query words ``int32[B]``.  Returns ``(slot, found, val)`` with
+    ``slot`` the find/upsert slot per lane, ``found`` a bool mask and
+    ``val`` the value at the *key's* chain end (garbage when ``~found``
+    — callers select with their own default, mirroring ``ht_lookup``).
+
+    Padding lanes probe key ``(0, 0)`` and are sliced off; under
+    ``jax.vmap`` (the stacked-replica layout) the batching rule adds a
+    grid dimension, so all replicas' probes still form one launch.
+    """
+    if mode not in ("find", "insert"):
+        raise ValueError(f"mode must be 'find' or 'insert': {mode}")
+    cap = tk1.shape[0]
+    assert cap & (cap - 1) == 0, "capacity must be a power of two"
+    q1 = jnp.asarray(q1, jnp.int32)
+    q2 = jnp.asarray(q2, jnp.int32)
+    b = q1.shape[0]
+    bl = min(block, max(8, b))
+    nb = -(-b // bl)
+    pad = nb * bl - b
+    if pad:
+        q1 = jnp.concatenate([q1, jnp.zeros((pad,), jnp.int32)])
+        q2 = jnp.concatenate([q2, jnp.zeros((pad,), jnp.int32)])
+    q1 = q1.reshape(nb, bl)
+    q2 = q2.reshape(nb, bl)
+
+    out_sds = jax.ShapeDtypeStruct((nb, bl), jnp.int32)
+    slot, found, val = pl.pallas_call(
+        functools.partial(_probe_kernel, cap=cap, mode=mode,
+                          prehashed=prehashed),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),          # k1 (launch-resident)
+            pl.BlockSpec(memory_space=pl.ANY),          # k2
+            pl.BlockSpec(memory_space=pl.ANY),          # val
+            pl.BlockSpec((1, bl), lambda i: (i, 0)),    # q1 lane block
+            pl.BlockSpec((1, bl), lambda i: (i, 0)),    # q2 lane block
+        ],
+        out_specs=[pl.BlockSpec((1, bl), lambda i: (i, 0))] * 3,
+        out_shape=[out_sds, out_sds, out_sds],
+        interpret=interpret,
+    )(tk1, tk2, tval, q1, q2)
+    slot = slot.reshape(-1)[:b]
+    found = found.reshape(-1)[:b] != 0
+    val = val.reshape(-1)[:b]
+    return slot, found, val

@@ -16,10 +16,37 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.csr_segment import build_blocked_csr, csr_segment_reduce
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.ht_probe import ht_probe_batch as _ht_probe_pallas
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def ht_probe(tk1: jax.Array, tk2: jax.Array, tval: jax.Array,
+             q1: jax.Array, q2: jax.Array, *,
+             prehashed: bool = False, mode: str = "find",
+             use_pallas: Optional[bool] = None,
+             interpret: Optional[bool] = None):
+    """Batched open-addressing probe: ``(slot, found, val)`` per query.
+
+    The engine's hot loop (``core/engine/hashtable.ht_find_batch`` /
+    ``ht_lookup_batch`` dispatch here under ``REPRO_TRIAL_BACKEND=pallas``).
+    Unlike the other ops this one defaults ``use_pallas`` to True — the
+    caller has already chosen the kernel path — and instead auto-selects
+    ``interpret``: compiled Pallas on TPU, interpret mode elsewhere (the
+    kernel inlines into the XLA program, so the CPU-only CI can run the
+    exact kernel data flow; XLA stays the only *compiled* CPU path).
+    """
+    if use_pallas is None:
+        use_pallas = True
+    if not use_pallas:
+        return ref.ht_probe_ref(tk1, tk2, tval, q1, q2,
+                                prehashed=prehashed, mode=mode)
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _ht_probe_pallas(tk1, tk2, tval, q1, q2, prehashed=prehashed,
+                            mode=mode, interpret=interpret)
 
 
 def segment_reduce(senders: jax.Array, receivers: jax.Array, x: jax.Array,

@@ -26,7 +26,43 @@ def segment_reduce_ref(senders: jax.Array, receivers: jax.Array,
         out = jax.ops.segment_max(msgs, receivers, num_segments=n_out)
     else:
         raise ValueError(reduce)
-    return jnp.where(jnp.isfinite(out), out, 0.0)
+    # zero EMPTY segments only — masking on isfinite would also clobber
+    # legitimate ±inf inputs that survive a nonempty min/max
+    cnt = jax.ops.segment_sum(jnp.ones_like(receivers, dtype=jnp.int32),
+                              receivers, num_segments=n_out)
+    mask = jnp.reshape(cnt > 0, (n_out,) + (1,) * (out.ndim - 1))
+    return jnp.where(mask, out, 0.0)
+
+
+def ht_probe_ref(tk1: jax.Array, tk2: jax.Array, tval: jax.Array,
+                 q1: jax.Array, q2: jax.Array, *, prehashed: bool = False,
+                 mode: str = "find"):
+    """Batched-probe oracle: vmap over the scalar ``hashtable.py`` loops.
+
+    The semantics of record for ``kernels/ht_probe.py`` — and exactly the
+    XLA lowering the engine compiles under ``REPRO_TRIAL_BACKEND=xla``, so
+    the kernel-vs-ref differential is also a kernel-vs-production-path
+    differential.  Returns ``(slot, found, val)`` with ``val`` read at the
+    key's chain end (pass-1 slot) whether or not the key was found.
+    """
+    from repro.core.engine.hashtable import (HashTable, _find_insert_slot,
+                                             ht_find)
+    ht = HashTable(k1=tk1, k2=tk2, val=tval)
+    q1 = jnp.asarray(q1, jnp.int32)
+    q2 = jnp.asarray(q2, jnp.int32)
+    if mode == "find":
+        slot, found = jax.vmap(
+            lambda a, b: ht_find(ht, a, b, prehashed=prehashed))(q1, q2)
+        return slot, found, tval[slot]
+    if mode != "insert":
+        raise ValueError(f"mode must be 'find' or 'insert': {mode}")
+    slot, found = jax.vmap(
+        lambda a, b: _find_insert_slot(ht, a, b, prehashed=prehashed))(q1, q2)
+    # the value still reads at the FIND chain end (insert slots may be
+    # TOMB resurrections whose stale val must not leak)
+    fslot, _ = jax.vmap(
+        lambda a, b: ht_find(ht, a, b, prehashed=prehashed))(q1, q2)
+    return slot, found, tval[fslot]
 
 
 def summary_spmm_ref(x: jax.Array, n2s: jax.Array, n_super: int,

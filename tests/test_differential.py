@@ -118,20 +118,12 @@ def test_predicated_step_matches_reference_batchwise_property(seed, deg):
     assert live == ground_truth_edges(stream)
 
 
-def test_trial_engine_compiles_cond_free():
-    """Acceptance tripwire (PR 5): the lowered engine step must contain no
-    ``cond`` primitive at any nesting depth — predication (masked writes +
-    0/1-trip while regions) is the only control flow besides scan/while."""
-    import numpy as np
-
-    import jax
-    from repro.core.engine.state import new_state
-    from repro.core.engine.trial import step_fn
-
-    cfg = _cfg(n_cap=64, m_cap=256, d_cap=8, sn_cap=8, c=3, batch=4)
+def _count_primitives(jaxpr, name: str) -> int:
+    """Occurrences of a primitive at any nesting depth (incl. inside
+    pallas_call kernel jaxprs, which live in eqn params)."""
+    import jax.core as jc
 
     def subjaxprs(val):
-        import jax.core as jc
         if isinstance(val, jc.ClosedJaxpr):
             return [val.jaxpr]
         if isinstance(val, jc.Jaxpr):
@@ -140,22 +132,104 @@ def test_trial_engine_compiles_cond_free():
             return [s for v in val for s in subjaxprs(v)]
         return []
 
-    def count_conds(jaxpr):
-        n = 0
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "cond":
-                n += 1
-            for val in eqn.params.values():
-                for sub in subjaxprs(val):
-                    n += count_conds(sub)
-        return n
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            n += 1
+        for val in eqn.params.values():
+            for sub in subjaxprs(val):
+                n += _count_primitives(sub, name)
+    return n
+
+
+@pytest.mark.parametrize("trial_backend", ["xla", "pallas"])
+def test_trial_engine_compiles_cond_free(trial_backend):
+    """Acceptance tripwire (PR 5, extended to the probe-kernel backend in
+    PR 6): the lowered engine step must contain no ``cond`` primitive at
+    any nesting depth — predication (masked writes + 0/1-trip while
+    regions) is the only control flow besides scan/while, under BOTH
+    probe backends and both ``dense`` lowerings.  The pallas path must
+    actually contain probe-kernel launches; the xla path must contain
+    none."""
+    import numpy as np
+
+    import jax
+    from repro.core.engine.hashtable import trial_backend_scope
+    from repro.core.engine.state import new_state
+    from repro.core.engine.trial import step_fn
+
+    cfg = _cfg(n_cap=64, m_cap=256, d_cap=8, sn_cap=8, c=3, batch=4)
 
     u = np.zeros(4, np.int32)
     for dense in (False, True):
-        closed = jax.make_jaxpr(
-            lambda s, a, b, c: step_fn(s, a, b, c, cfg, dense))(
-                new_state(cfg), u, u + 1, u > 0)
-        assert count_conds(closed.jaxpr) == 0, f"cond found (dense={dense})"
+        with trial_backend_scope(trial_backend):
+            closed = jax.make_jaxpr(
+                lambda s, a, b, c: step_fn(s, a, b, c, cfg, dense))(
+                    new_state(cfg), u, u + 1, u > 0)
+        tag = f"backend={trial_backend} dense={dense}"
+        assert _count_primitives(closed.jaxpr, "cond") == 0, \
+            f"cond found ({tag})"
+        n_pallas = _count_primitives(closed.jaxpr, "pallas_call")
+        if trial_backend == "pallas":
+            assert n_pallas > 0, f"no probe kernel launch traced ({tag})"
+        else:
+            assert n_pallas == 0, f"unexpected pallas_call ({tag})"
+
+
+def test_pallas_step_bitwise_equals_xla_step():
+    """The probe-kernel backend is not 'close': on an identical stream the
+    pallas- and xla-backed engines must end in leaf-bitwise IDENTICAL
+    states — the probe sequence is the on-device table layout, so any
+    divergence is corruption, not noise."""
+    import jax
+    import numpy as np
+
+    edges = sbm_edges(30, 3, 0.5, 0.06, seed=21)
+    stream = edges_to_fully_dynamic_stream(edges, delete_prob=0.2, seed=22)
+    cfg = _cfg(n_cap=128, m_cap=1024, batch=8, c=6)
+    bx = BatchedSummarizer(cfg, trial_backend="xla").run(stream)
+    bp = BatchedSummarizer(cfg, trial_backend="pallas").run(stream)
+    assert bx.phi == bp.phi
+    for lx, lp in zip(jax.tree.leaves(bx.state), jax.tree.leaves(bp.state)):
+        np.testing.assert_array_equal(np.asarray(lx), np.asarray(lp))
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 9999), st.integers(2, 4))
+def test_pallas_step_matches_reference_batchwise_property(seed, deg):
+    """Property (PR 6): the PALLAS-backed trial engine — batched probes
+    fused into ``kernels/ht_probe.py`` launches, interpret mode on CPU —
+    satisfies the same Tier-A reference contract batchwise as the
+    predicated XLA engine: the phi invariant holds in both tiers after
+    every batch and both decode losslessly to the exact live edge set.
+    One fixed config, so every example reuses one compiled step."""
+    edges = sbm_edges(28, deg, 0.5, 0.06, seed=seed)
+    stream = edges_to_fully_dynamic_stream(edges, delete_prob=0.2,
+                                           seed=seed + 1)
+    cfg = _cfg(n_cap=128, m_cap=1024, batch=8, c=6)
+    bs = BatchedSummarizer(cfg, trial_backend="pallas")
+    ref = DynamicSummary()
+    live = set()
+    for off in range(0, len(stream), cfg.batch):
+        chunk = stream[off:off + cfg.batch]
+        bs.process(chunk)
+        for (u, v, ins) in chunk:
+            e = (min(u, v), max(u, v))
+            if ins:
+                ref.insert(*e)
+                live.add(e)
+            else:
+                ref.delete(*e)
+                live.discard(e)
+        tag = f"seed={seed} off={off}"
+        ref_mat = ref.materialize()
+        assert ref.phi == ref_mat.phi == ref.phi_recomputed(), tag
+        eng_mat = bs.materialize()      # also asserts eab vs live edges
+        assert bs.phi == eng_mat.phi == bs.phi_recomputed(), tag
+        assert ref_mat.decode_edges() == live, tag
+        eng_live = {pair_key(bs._ids[u], bs._ids[v]) for (u, v) in live}
+        assert eng_mat.decode_edges() == eng_live, tag
+    assert live == ground_truth_edges(stream)
 
 
 def test_sharded_summarizer_matches_ground_truth_single_device():

@@ -4,6 +4,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # container has no hypothesis; deterministic shim
+    from repro.testing.proptest import given, settings, strategies as st
+
+from repro.core.engine import hashtable as htm
 from repro.kernels import ops, ref
 
 
@@ -19,6 +25,159 @@ def test_segment_reduce_sweep(n, e, f, reduce):
                              use_pallas=True, interpret=True)
     want = ref.segment_reduce_ref(senders, receivers, x, n, reduce)
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("reduce", ["min", "max"])
+def test_segment_reduce_keeps_inf_inputs(reduce):
+    """Regression: empty-segment masking must key on segment COUNT, not
+    isfinite — a legitimate ±inf input that survives a nonempty min/max
+    used to be zeroed alongside the empty segments."""
+    n = 130                         # > one 128-row block: block 1 is empty
+    senders = jnp.array([0, 1, 2, 3], jnp.int32)
+    receivers = jnp.array([0, 0, 1, 2], jnp.int32)
+    x = jnp.zeros((n, 2), jnp.float32).at[:4].set(
+        jnp.array([[np.inf, -np.inf],      # -> segment 0
+                   [3.0, 4.0],             # -> segment 0
+                   [-np.inf, np.inf],      # -> segment 1 (alone)
+                   [1.0, -1.0]],           # -> segment 2 (alone)
+                  jnp.float32))
+    want = np.zeros((n, 2), np.float32)
+    want[0] = [3.0, -np.inf] if reduce == "min" else [np.inf, 4.0]
+    want[1] = [-np.inf, np.inf]            # ±inf must survive verbatim
+    want[2] = [1.0, -1.0]
+    got_ref = ref.segment_reduce_ref(senders, receivers, x, n, reduce)
+    got_pl = ops.segment_reduce(senders, receivers, x, n, reduce,
+                                use_pallas=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_ref), want)
+    np.testing.assert_array_equal(np.asarray(got_pl), want)
+
+
+# --------------------------------------------------------------------- #
+# batched hash-probe kernel: bitwise differential vs the while-loop
+# lowering (the contract REPRO_TRIAL_BACKEND=pallas rests on)
+# --------------------------------------------------------------------- #
+
+
+def _build_table(cap, n_live, n_tomb, seed, key_space=2000):
+    """A table at a given load with tombstoned chains mixed in."""
+    rng = np.random.default_rng(seed)
+    ht = htm.ht_new(cap)
+    keys = rng.integers(0, key_space, size=(n_live + n_tomb, 2))
+    keys = np.unique(keys.astype(np.int32), axis=0)
+    for i, (a, b) in enumerate(keys):
+        ht = htm.ht_set(ht, int(a), int(b), i + 1)
+    for (a, b) in keys[n_live:]:
+        ht = htm.ht_delete(ht, int(a), int(b))
+    return ht, keys[:n_live]
+
+
+@pytest.mark.parametrize("cap,n_live,n_tomb", [
+    (64, 16, 0),        # light load
+    (64, 40, 12),       # heavy load + tombstoned chains
+    (256, 200, 30),     # long chains near capacity
+    (16, 16, 0),        # FULL table: absent probes wrap the whole chain
+])
+@pytest.mark.parametrize("prehashed", [False, True])
+@pytest.mark.parametrize("mode", ["find", "insert"])
+def test_ht_probe_kernel_bitwise_sweep(cap, n_live, n_tomb, prehashed,
+                                       mode):
+    """Pallas probe kernel vs the ``hashtable.py`` while-loop lowering:
+    slots, found flags and values must be BITWISE equal — present keys,
+    absent keys, garbage keys (the ``ok=False`` masked-call contract),
+    and full-chain wrap-around probes alike."""
+    ht, live = _build_table(cap, n_live, n_tomb, seed=cap + n_live)
+    rng = np.random.default_rng(7 * cap + n_live)
+    qs = [live[: min(24, len(live))]]                       # present keys
+    qs.append(rng.integers(0, 2000, size=(16, 2)).astype(np.int32))
+    # garbage keys over the full int32 range, incl. negatives — exactly
+    # what masked (ok=False) callers feed the probe on untaken arms
+    qs.append(rng.integers(-2**31, 2**31, size=(16, 2)).astype(np.int32))
+    q = np.concatenate(qs)
+    got = ops.ht_probe(ht.k1, ht.k2, ht.val, q[:, 0], q[:, 1],
+                       prehashed=prehashed, mode=mode,
+                       use_pallas=True, interpret=True)
+    want = ref.ht_probe_ref(ht.k1, ht.k2, ht.val, q[:, 0], q[:, 1],
+                            prehashed=prehashed, mode=mode)
+    for g, w, name in zip(got, want, ("slot", "found", "val")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=f"{name} differs")
+
+
+@pytest.mark.parametrize("batch", [1, 5, 128, 300])
+def test_ht_probe_kernel_batch_shapes(batch):
+    """Lane-padding edge cases: batches below, at and above one block."""
+    ht, live = _build_table(64, 30, 5, seed=batch)
+    rng = np.random.default_rng(batch)
+    q = rng.integers(0, 2000, size=(batch, 2)).astype(np.int32)
+    got = ops.ht_probe(ht.k1, ht.k2, ht.val, q[:, 0], q[:, 1],
+                       use_pallas=True, interpret=True)
+    want = ref.ht_probe_ref(ht.k1, ht.k2, ht.val, q[:, 0], q[:, 1])
+    for g, w in zip(got, want):
+        assert g.shape == (batch,)
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_ht_lookup_batch_backend_equivalence():
+    """The engine-facing dispatch point: ``ht_lookup_batch`` /
+    ``ht_find_batch`` under ``trial_backend_scope("pallas")`` vs the
+    default XLA lowering, on the same table."""
+    ht, live = _build_table(128, 70, 20, seed=3)
+    rng = np.random.default_rng(3)
+    q = np.concatenate([live[:20],
+                        rng.integers(0, 2000, size=(30, 2))]).astype(np.int32)
+    q1, q2 = jnp.asarray(q[:, 0]), jnp.asarray(q[:, 1])
+    lx = htm.ht_lookup_batch(ht, q1, q2, default=-7)
+    fx = htm.ht_find_batch(ht, q1, q2)
+    with htm.trial_backend_scope("pallas"):
+        lp = htm.ht_lookup_batch(ht, q1, q2, default=-7)
+        fp = htm.ht_find_batch(ht, q1, q2)
+    np.testing.assert_array_equal(np.asarray(lx), np.asarray(lp))
+    for a, b in zip(fx, fp):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------- #
+# masked-write contract: the property the probe kernel must reproduce
+# --------------------------------------------------------------------- #
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 9999),
+       st.lists(st.tuples(st.sampled_from(["set", "add", "addz", "del"]),
+                          st.integers(0, 14), st.integers(0, 14),
+                          st.integers(-2, 3), st.booleans()),
+                min_size=1, max_size=40))
+def test_masked_write_contract_property(seed, script):
+    """Any interleaving of ``ht_set``/``ht_add``/``ht_delete`` with random
+    ``ok`` masks leaves the table leaf-bitwise equal to replaying only the
+    ``ok=True`` ops — a masked op is a structural no-op even when fed a
+    garbage key.  This is the contract the predicated trial engine (and
+    therefore the probe kernel) rests on."""
+    rng = np.random.default_rng(seed)
+    full = htm.ht_new(32)       # small cap + small key space: collisions,
+    replay = htm.ht_new(32)     # tombstone resurrection, near-full chains
+
+    def apply(ht, op, k1, k2, d, ok):
+        if op == "set":
+            return htm.ht_set(ht, k1, k2, d, ok=ok)
+        if op == "add":
+            return htm.ht_add(ht, k1, k2, d, ok=ok)[0]
+        if op == "addz":
+            return htm.ht_add(ht, k1, k2, d, remove_if_zero=True, ok=ok)[0]
+        return htm.ht_delete(ht, k1, k2, ok=ok)
+
+    for (op, k1, k2, d, ok) in script:
+        if ok:
+            gk1, gk2 = k1, k2
+            replay = apply(replay, op, k1, k2, d, True)
+        else:   # masked call: garbage key over the full int32 range
+            gk1 = int(rng.integers(-2**31, 2**31))
+            gk2 = int(rng.integers(-2**31, 2**31))
+        full = apply(full, op, gk1, gk2, d, ok)
+
+    for a, b, name in zip(full, replay, ("k1", "k2", "val")):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{name} drifted")
 
 
 @pytest.mark.parametrize("dtype,rtol", [(jnp.float32, 2e-3),
