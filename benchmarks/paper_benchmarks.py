@@ -317,14 +317,93 @@ def probe_microbench(cap: int = 4096, batch: int = 256,
     return rows
 
 
+def query_microbench(n_nodes: int = 300, deg: int = 4, n_shards: int = 2,
+                     chunk: int = 256, batch_q: int = 256,
+                     iters: int = 20) -> List[Row]:
+    """Beyond-paper: serving reads from the live summary (serve/query.py).
+
+    A sharded summarizer ingests an FD stream, then the online query path
+    answers reads from flush-epoch snapshots without decompression:
+
+    * ``query/point`` — one single-label service round trip
+      (``neighbors`` + ``degree`` + ``has_edge``), us per operation; the
+      end-to-end latency a point read pays, host label translation and
+      snapshot fan-out included.
+    * ``query/batch`` — a ``batch_q``-label ``neighbors_batch`` +
+      ``degree_batch`` sweep, us per query; the amortized shape GNN-style
+      gathers use (examples/gnn_over_summary.py).
+
+    Correctness is asserted against ``decode_edges()`` before the clock
+    starts — the same query-vs-decode bar tests/test_differential.py
+    holds the kernels to.
+    """
+    import numpy as np
+
+    rows: List[Row] = []
+    stream = _stream(n_nodes, deg, seed=13)
+    cfg = EngineConfig(n_cap=2048, m_cap=1 << 14, d_cap=64, sn_cap=48,
+                       c=16, batch=64, escape=0.2)
+    ss = ShardedSummarizer(cfg, n_shards=n_shards, router_chunk=chunk)
+    ss.run(stream)
+    ss.flush()
+
+    # query-vs-decode agreement before anything is timed
+    dec = ss.materialize().decode_edges()
+    adj: dict = {}
+    for (u, v) in dec:
+        adj.setdefault(u, set()).add(v)
+        adj.setdefault(v, set()).add(u)
+    view = ss.query()
+    labs = view.seen_labels()
+    check = labs[:32]
+    assert view.neighbors_batch(check) == \
+        [adj.get(x, set()) for x in check], "query drift vs decode"
+
+    rng = np.random.default_rng(0)
+    qlabs = [labs[i] for i in rng.integers(0, len(labs), batch_q)]
+    pairs = list(zip(qlabs, qlabs[::-1]))
+
+    # warm both kernel shapes (point + batch) outside the clock
+    view.neighbors(qlabs[0])
+    view.degree(qlabs[0])
+    view.has_edge(*pairs[0])
+    view.neighbors_batch(qlabs)
+    view.degree_batch(qlabs)
+
+    n_pt = 16
+    t0 = time.time()
+    for _ in range(iters):
+        for lab, pair in zip(qlabs[:n_pt], pairs[:n_pt]):
+            view.neighbors(lab)
+            view.degree(lab)
+            if pair[0] != pair[1]:
+                view.has_edge(*pair)
+    us_pt = 1e6 * (time.time() - t0) / (iters * n_pt * 3)
+    rows.append(("query/point", us_pt,
+                 f"n={n_nodes} shards={n_shards} ops=neighbors+degree+"
+                 f"has_edge phi={ss.phi}"))
+
+    t0 = time.time()
+    for _ in range(iters):
+        view.neighbors_batch(qlabs)
+        view.degree_batch(qlabs)
+    us_b = 1e6 * (time.time() - t0) / (iters * 2 * batch_q)
+    rows.append(("query/batch", us_b,
+                 f"batch={batch_q} n={n_nodes} shards={n_shards} "
+                 f"point_over_batch={us_pt/max(us_b,1e-9):.1f}x"))
+    return rows
+
+
 def smoke() -> List[Row]:
     """Tiny-config subset for CI: exercises both routing modes end to end
-    (including the lockstep phi assertion) plus the probe microbenchmark
-    in well under a minute."""
+    (including the lockstep phi assertion), the probe microbenchmark, and
+    the online query path in well under a minute."""
     return (router_throughput(n_nodes=120, deg=3, n_shards=2, chunk=128)
-            + probe_microbench(cap=1024, batch=128, iters=50))
+            + probe_microbench(cap=1024, batch=128, iters=50)
+            + query_microbench(n_nodes=120, deg=3, n_shards=2, chunk=128,
+                               batch_q=64, iters=5))
 
 
 ALL = [fig4_speed, fig5_compression, fig1c_scalability, fig6_parameters,
        fig7a_graph_properties, engine_throughput, router_throughput,
-       probe_microbench]
+       probe_microbench, query_microbench]

@@ -156,6 +156,7 @@ class BatchedSummarizer:
         self._step = make_step(cfg, trial_backend=self.trial_backend)
         self._ids: Dict[object, int] = {}
         self._rev: List[object] = []
+        self._epoch = 0             # engine-step dispatches applied so far
 
     # ------------------------------------------------------------------ ids
     def _nid(self, label: object) -> int:
@@ -178,10 +179,28 @@ class BatchedSummarizer:
             v = np.array([c[1] for c in chunk] + [-1] * pad, np.int32)
             ins = np.array([c[2] for c in chunk] + [False] * pad, bool)
             self.state = self._step(self.state, u, v, ins)
+            self._epoch += 1
 
     def run(self, stream: Iterable[Change]) -> "BatchedSummarizer":
         self.process(list(stream))
         return self
+
+    # ---------------------------------------------------------------- reads
+    @property
+    def flush_epoch(self) -> int:
+        """Engine-step dispatches applied to ``state`` so far.  The state
+        pytree is replaced functionally per dispatch, so a reference
+        captured between ``process`` calls is exactly this epoch's state."""
+        return self._epoch
+
+    def query(self):
+        """Snapshot read view answering ``neighbors``/``degree``/
+        ``has_edge`` in caller-label space directly from the compressed
+        engine state — no decompression (:mod:`repro.serve.query`).
+        Labels streamed after this call raise ``LookupError`` on the view.
+        """
+        from repro.serve.query import SummaryQuery
+        return SummaryQuery(self)
 
     # ------------------------------------------------------------ maintenance
     def table_pressure(self) -> Dict[str, float]:
@@ -439,6 +458,7 @@ class ShardedSummarizer:
         # rounds execute (one routed chunk in flight, flushed at sync)
         self.pipeline = bool(pipeline) and self.sync_free
         self._pending = None        # routed buckets awaiting engine dispatch
+        self._epoch = 0             # engine dispatches applied to self.state
 
         state1 = new_state(cfg)
         n = self.n_shards
@@ -668,6 +688,7 @@ class ShardedSummarizer:
                     bfl[s, :k] = fl[sel]
             self.state, self.intern = self._bucketed(
                 self.state, self.intern, buh, bul, bvh, bvl, bfl)
+        self._epoch += 1
         self._host_cache = None
         if len(self._label_buf) >= 128:
             self._compact_label_buf()
@@ -705,9 +726,11 @@ class ShardedSummarizer:
             if prev is not None:
                 self.state, self.intern, self._drain_rounds = self._engine(
                     self.state, self.intern, self._drain_rounds, *prev)
+                self._epoch += 1
             return
         self.state, self.intern, self._drain_rounds = self._engine(
             self.state, self.intern, self._drain_rounds, *routed)
+        self._epoch += 1
         if self.sync_free:
             return                           # statically fully delivered
         self.router_syncs += 1
@@ -725,6 +748,7 @@ class ShardedSummarizer:
             prev, self._pending = self._pending, None
             self.state, self.intern, self._drain_rounds = self._engine(
                 self.state, self.intern, self._drain_rounds, *prev)
+            self._epoch += 1
 
     def flush(self) -> None:
         """Public barrier: drain the dispatch pipeline (device-side only).
@@ -736,6 +760,26 @@ class ShardedSummarizer:
     def run(self, stream: Iterable[Change]) -> "ShardedSummarizer":
         self.process(list(stream))
         return self
+
+    # ---------------------------------------------------------------- reads
+    @property
+    def flush_epoch(self) -> int:
+        """Engine dispatches applied to ``state``/``intern`` so far — the
+        flushed-epoch counter query snapshots pin.  On the pipelined path
+        this trails the chunks handed to ``process`` by the one routed
+        chunk still awaiting its engine stage."""
+        return self._epoch
+
+    def query(self, copy: bool = False):
+        """Snapshot read view answering ``neighbors``/``degree``/
+        ``has_edge`` in caller-label space from the live per-shard states
+        — hash-placed fan-out, answers merged across shards, NO pipeline
+        flush and NO decompression (:mod:`repro.serve.query`).  The view
+        is pinned to ``flush_epoch``; on buffer-donating backends pass
+        ``copy=True`` to keep it valid past the next ``process`` call
+        (docs/KNOWN_ISSUES.md)."""
+        from repro.serve.query import ShardedSummaryQuery
+        return ShardedSummaryQuery(self, copy=copy)
 
     # ---------------------------------------------------------------- stats
     def host_states(self) -> List[EngineState]:

@@ -4,9 +4,10 @@ from repro.core.reference.algorithms import (ALGORITHMS, MoSSo, MoSSoGreedy,
 from repro.core.reference.dynamic_summary import DynamicSummary
 from repro.core.reference.minhash import MinHashClusters
 from repro.core.reference.neighbor_sampler import get_random_neighbors
+from repro.core.reference.summary_query import SummaryQueryOracle
 
 __all__ = [
     "ALGORITHMS", "MoSSo", "MoSSoGreedy", "MoSSoMCMC", "MoSSoSimple",
     "StreamingSummarizer", "DynamicSummary", "MinHashClusters",
-    "get_random_neighbors",
+    "get_random_neighbors", "SummaryQueryOracle",
 ]

@@ -1,0 +1,9 @@
+"""Online serving layer: read queries answered from the live summary."""
+from repro.serve.query import (QueryKernels, ShardedSummaryQuery,
+                               SummaryQuery, make_query_kernels,
+                               make_sharded_query_kernels)
+
+__all__ = [
+    "QueryKernels", "SummaryQuery", "ShardedSummaryQuery",
+    "make_query_kernels", "make_sharded_query_kernels",
+]

@@ -232,6 +232,96 @@ def test_pallas_step_matches_reference_batchwise_property(seed, deg):
     assert live == ground_truth_edges(stream)
 
 
+def _adj_from_edges(edge_set):
+    adj = {}
+    for (u, v) in edge_set:
+        adj.setdefault(u, set()).add(v)
+        adj.setdefault(v, set()).add(u)
+    return adj
+
+
+@pytest.mark.parametrize("trial_backend", ["xla", "pallas"])
+def test_query_vs_decode_differential_batched(trial_backend):
+    """Standing-bar extension (PR 7): on an FD stream, after EVERY batch,
+    neighbors/degree/has_edge answered from the compressed engine state —
+    membership -> superedge scan -> correction patch-up, no decompression
+    — must exactly equal answers computed from ``decode_edges()``, and a
+    third, independent host walk of the materialized output (the
+    :class:`SummaryQueryOracle`) must agree with both; under both probe
+    backends."""
+    import itertools
+
+    from repro.core.reference import SummaryQueryOracle
+
+    edges = sbm_edges(36, 4, 0.55, 0.05, seed=3)
+    stream = edges_to_fully_dynamic_stream(edges, delete_prob=0.2, seed=4)
+    cfg = _cfg(n_cap=128, m_cap=1024, batch=16, c=6)
+    bs = BatchedSummarizer(cfg, trial_backend=trial_backend)
+
+    for off in range(0, len(stream), cfg.batch):
+        bs.process(stream[off:off + cfg.batch])
+        tag = f"backend={trial_backend} off={off}"
+        q = bs.query()
+        mat = bs.materialize()
+        # the decode oracle, mapped back to caller labels
+        dec = {pair_key(bs._rev[a], bs._rev[b])
+               for (a, b) in mat.decode_edges()}
+        adj = _adj_from_edges(dec)
+        oracle = SummaryQueryOracle(mat)       # host Lemma-1 walk, eng ids
+        labs = q.seen_labels()
+        for lab, nb, dg in zip(labs, q.neighbors_batch(labs),
+                               q.degree_batch(labs)):
+            want = adj.get(lab, set())
+            assert nb == want, f"neighbors({lab}) {tag}"
+            assert dg == len(want), f"degree({lab}) {tag}"
+            assert oracle.neighbors(bs._ids[lab]) == \
+                {bs._ids[w] for w in want}, f"oracle({lab}) {tag}"
+        pairs = list(itertools.combinations(labs[:12], 2))
+        for (u, v), got in zip(pairs, q.has_edge_batch(pairs)):
+            want = pair_key(u, v) in dec
+            assert got == want, f"has_edge({u},{v}) {tag}"
+            assert oracle.has_edge(bs._ids[u], bs._ids[v]) == want, tag
+
+
+def test_query_vs_decode_differential_sharded():
+    """Standing-bar extension (PR 7), sharded tier: after every routed
+    chunk the flushed snapshot's query answers must exactly equal the
+    union-of-parts ``decode_edges()`` (both in caller-label space), and
+    the host oracle over the merged output must agree.  ``replica_exec``
+    and the probe backend come from the environment, so the CI
+    router-stress matrix runs this under all four combinations."""
+    import itertools
+
+    from repro.core.reference import SummaryQueryOracle
+
+    edges = sbm_edges(40, 4, 0.5, 0.05, seed=13)
+    stream = edges_to_fully_dynamic_stream(edges, delete_prob=0.2, seed=14)
+    cfg = _cfg(n_cap=128, m_cap=1024, batch=8)
+    ss = ShardedSummarizer(cfg, n_shards=2, router_chunk=64)
+
+    for off in range(0, len(stream), ss.router_chunk):
+        ss.process(stream[off:off + ss.router_chunk])
+        tag = f"off={off}"
+        mat = ss.materialize()     # sync point: flushes the pipeline
+        q = ss.query()             # snapshot == the flushed epoch
+        assert q.epoch == ss.flush_epoch
+        dec = mat.decode_edges()   # caller-label pairs (union of parts)
+        adj = _adj_from_edges(dec)
+        oracle = SummaryQueryOracle(mat)
+        labs = q.seen_labels()
+        for lab, nb, dg in zip(labs, q.neighbors_batch(labs),
+                               q.degree_batch(labs)):
+            want = adj.get(lab, set())
+            assert nb == want, f"neighbors({lab}) {tag}"
+            assert dg == len(want), f"degree({lab}) {tag}"
+            assert oracle.neighbors(lab) == want, f"oracle({lab}) {tag}"
+        pairs = list(itertools.combinations(labs[:12], 2))
+        for (u, v), got in zip(pairs, q.has_edge_batch(pairs)):
+            want = pair_key(u, v) in dec
+            assert got == want, f"has_edge({u},{v}) {tag}"
+            assert oracle.has_edge(u, v) == want, tag
+
+
 def test_sharded_summarizer_matches_ground_truth_single_device():
     """ShardedSummarizer with 2 logical partitions on however many devices
     the test process has (1 in tier-1 runs): lossless union decode, phi

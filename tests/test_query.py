@@ -1,0 +1,231 @@
+"""Online query engine: snapshot consistency and query-semantics contracts.
+
+The tentpole bar for the serve layer (repro/serve/query.py):
+
+* snapshot consistency — interleaving queries with stream chunks on the
+  ShardedSummarizer (pipelined AND serial dispatch), every answer must
+  correspond bitwise to some flushed epoch's edge set, never a torn
+  intermediate; on the pipelined path snapshots must actually trail the
+  write head (reads concurrent with an in-flight write chunk);
+* unseen-label semantics — LookupError from all three operations, on
+  both tiers, including labels the SUMMARIZER has seen but the pinned
+  snapshot epoch has not;
+* deleted-node semantics — a node whose edges were all removed stays
+  queryable: empty neighbor set, degree 0, has_edge False;
+* the sharded fan-out merge — at most one shard reports an edge, and it
+  is the pair's ``shard_key`` owner.
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core.engine import BatchedSummarizer, EngineConfig, ShardedSummarizer
+from repro.graph.streams import edges_to_fully_dynamic_stream, sbm_edges
+
+
+def _cfg(**kw):
+    base = dict(n_cap=256, m_cap=2048, d_cap=48, sn_cap=32, c=8, batch=8,
+                escape=0.3)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+CHUNK = 48
+
+
+def _stream(seed=7):
+    edges = sbm_edges(40, 4, 0.5, 0.05, seed=seed)
+    return edges_to_fully_dynamic_stream(edges, delete_prob=0.2,
+                                         seed=seed + 1)
+
+
+def _prefix(stream, n_chunks):
+    """(live edge adjacency, seen labels) after the first n_chunks."""
+    live, seen = set(), set()
+    for (u, v, ins) in stream[:n_chunks * CHUNK]:
+        seen.add(u)
+        seen.add(v)
+        e = (min(u, v), max(u, v))
+        live.add(e) if ins else live.discard(e)
+    adj = {}
+    for (u, v) in live:
+        adj.setdefault(u, set()).add(v)
+        adj.setdefault(v, set()).add(u)
+    return live, adj, seen
+
+
+@pytest.mark.parametrize("pipeline", [True, False])
+def test_sharded_query_snapshots_pin_flushed_epochs(pipeline):
+    """Every snapshot's answers equal EXACTLY the edge set after
+    ``view.epoch`` chunks — not the write head's, not any in-between
+    state — checked for all three operations on every view, with views
+    queried immediately after creation (while the pipelined router still
+    has the next chunk's routing / this chunk's engine stage in flight)
+    and again after the whole stream finished (CPU buffers are never
+    donated, so held snapshots stay valid — docs/KNOWN_ISSUES.md)."""
+    stream = _stream()
+    cfg = _cfg(n_cap=128, m_cap=1024)
+    ss = ShardedSummarizer(cfg, n_shards=2, router_chunk=CHUNK,
+                           pipeline=pipeline)
+    assert ss.pipeline == pipeline
+    n_chunks = -(-len(stream) // CHUNK)
+
+    views = []
+    for k in range(n_chunks):
+        ss.process(stream[k * CHUNK:(k + 1) * CHUNK])
+        q = ss.query()
+        views.append((q, k + 1))
+        # answer a read immediately, concurrent with the in-flight chunk
+        live, adj, seen = _prefix(stream, q.epoch)
+        some = sorted(seen)[:6]
+        assert q.neighbors_batch(some) == [adj.get(x, set()) for x in some]
+
+    # epoch lag: pipelined snapshots trail the write head by the pending
+    # routed chunk; serial snapshots sit exactly at it
+    lags = [head - q.epoch for (q, head) in views]
+    if pipeline:
+        # one routed chunk always in flight -> every snapshot trails by 1
+        assert all(lag == 1 for lag in lags), \
+            f"pipelined reads should overlap a write: lags={lags}"
+    else:
+        assert all(lag == 0 for lag in lags)
+
+    ss.flush()
+    views.append((ss.query(), n_chunks))
+    assert views[-1][0].epoch == n_chunks
+
+    for q, _head in views:
+        live, adj, seen = _prefix(stream, q.epoch)
+        labs = q.seen_labels()
+        # the snapshot sees exactly its epoch's label horizon
+        assert set(labs) == seen
+        assert q.neighbors_batch(labs) == [adj.get(x, set()) for x in labs]
+        assert q.degree_batch(labs) == [len(adj.get(x, set())) for x in labs]
+        pairs = list(itertools.combinations(sorted(seen)[:10], 2))
+        if pairs:
+            want = [(min(u, v), max(u, v)) in live for (u, v) in pairs]
+            assert q.has_edge_batch(pairs) == want
+        # labels first streamed AFTER the snapshot epoch are unseen HERE
+        # even though the summarizer has long seen them
+        _, _, seen_all = _prefix(stream, n_chunks)
+        for lab in sorted(seen_all - seen)[:2]:
+            with pytest.raises(LookupError):
+                q.neighbors(lab)
+
+
+def test_sharded_fanout_merges_owner_shard_answers():
+    """Vertex-cut fan-out: a node's neighbors may span shards (union
+    merge, degrees add exactly), while an edge lives in at most ONE shard
+    — its ``shard_key`` owner, per ``has_edge_by_shard``."""
+    stream = _stream(seed=21)
+    ss = ShardedSummarizer(_cfg(n_cap=128, m_cap=1024), n_shards=2,
+                           router_chunk=CHUNK).run(stream)
+    ss.flush()                  # compare against the full stream's edges
+    q = ss.query()
+    live, adj, seen = _prefix(stream, -(-len(stream) // CHUNK))
+    pairs = [tuple(e) for e in sorted(live)[:20]]
+    present = q.has_edge_by_shard(pairs)
+    assert present.shape[0] == 2
+    assert (present.sum(axis=0) == 1).all()
+    for j, (u, v) in enumerate(pairs):
+        assert int(present[:, j].argmax()) == ss.shard_of(u, v)
+    # both shards actually answered some neighbor queries
+    some = sorted(seen)
+    assert q.neighbors_batch(some) == [adj.get(x, set()) for x in some]
+    assert q.degree_batch(some) == [len(adj.get(x, set())) for x in some]
+
+
+@pytest.mark.parametrize("tier", ["batched", "sharded"])
+def test_unseen_label_raises_lookup_error(tier):
+    stream = _stream(seed=5)
+    if tier == "batched":
+        s = BatchedSummarizer(_cfg(n_cap=128, m_cap=1024)).run(stream)
+    else:
+        s = ShardedSummarizer(_cfg(n_cap=128, m_cap=1024),
+                              n_shards=2).run(stream)
+        s.flush()
+    q = s.query()
+    seen_lab = q.seen_labels()[0]
+    for call in (lambda: q.neighbors("never-streamed"),
+                 lambda: q.degree("never-streamed"),
+                 lambda: q.has_edge("never-streamed", seen_lab),
+                 lambda: q.has_edge(seen_lab, "never-streamed")):
+        with pytest.raises(LookupError):
+            call()
+
+
+@pytest.mark.parametrize("tier", ["batched", "sharded"])
+def test_deleted_node_answers_empty_not_lookup_error(tier):
+    """A node whose every edge was deleted was still STREAMED: it answers
+    the empty set / 0 / False rather than LookupError."""
+    stream = [(0, 1, True), (0, 2, True), (1, 2, True),
+              (0, 1, False), (0, 2, False)]
+    cfg = _cfg(n_cap=64, m_cap=256, batch=4)
+    if tier == "batched":
+        s = BatchedSummarizer(cfg).run(stream)
+    else:
+        s = ShardedSummarizer(cfg, n_shards=2, router_chunk=8).run(stream)
+        s.flush()
+    q = s.query()
+    assert q.neighbors(0) == set()
+    assert q.degree(0) == 0
+    assert q.has_edge(0, 1) is False
+    assert q.has_edge(0, 0) is False        # self loops never exist
+    assert q.neighbors(1) == {2}
+    assert q.degree(2) == 1
+
+
+def test_batched_snapshot_pins_label_horizon_and_state():
+    """Batched tier: a snapshot answers its own epoch even after the
+    summarizer moves on — later-streamed labels raise LookupError on the
+    old view and resolve on a fresh one (CPU: no buffer donation)."""
+    cfg = _cfg(n_cap=64, m_cap=256, batch=4)
+    bs = BatchedSummarizer(cfg)
+    bs.process([(0, 1, True), (1, 2, True), (2, 3, True), (3, 0, True)])
+    q1 = bs.query()
+    e1 = q1.epoch
+    assert q1.neighbors(0) == {1, 3}
+    bs.process([(0, 1, False), (4, 0, True), (4, 2, True), (1, 3, True)])
+    assert bs.flush_epoch > e1
+    # the old view still serves epoch e1's edge set
+    assert q1.epoch == e1
+    assert q1.neighbors(0) == {1, 3}
+    assert q1.degree(1) == 2
+    assert q1.has_edge(0, 1) is True
+    with pytest.raises(LookupError):
+        q1.neighbors(4)
+    q2 = bs.query()
+    assert q2.neighbors(0) == {3, 4}
+    assert q2.has_edge(0, 1) is False
+    assert q2.neighbors(4) == {0, 2}
+
+
+def test_serve_summary_driver_reads_overlap_writes():
+    """The launch driver runs verified read traffic concurrent with the
+    write stream and reports the epoch lag that proves the overlap."""
+    from repro.launch.serve_summary import serve_summary
+
+    stream = _stream(seed=9)
+    ss = ShardedSummarizer(_cfg(n_cap=128, m_cap=1024), n_shards=2,
+                           router_chunk=CHUNK)
+    out = serve_summary(ss, stream, reads_per_chunk=16, verify=True, seed=0)
+    assert out["verified"] is True
+    assert out["reads"] > 0
+    assert out["reads_overlapped_writes"] is True   # pipelined: lag >= 1
+    assert out["final_epoch"] == out["chunks"]
+    assert out["max_lag"] >= 1
+
+
+def test_query_batch_padding_is_invisible():
+    """Query batches pad to powers of two on device; padded lanes must
+    never leak into answers across a range of batch sizes."""
+    stream = _stream(seed=3)
+    bs = BatchedSummarizer(_cfg(n_cap=128, m_cap=1024)).run(stream)
+    q = bs.query()
+    live, adj, seen = _prefix(stream, 10 ** 6)
+    labs = sorted(seen)
+    for k in (1, 2, 3, 7, 8, 9, len(labs)):
+        sub = labs[:k]
+        assert q.neighbors_batch(sub) == [adj.get(x, set()) for x in sub]
+        assert q.degree_batch(sub) == [len(adj.get(x, set())) for x in sub]
