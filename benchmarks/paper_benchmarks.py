@@ -232,7 +232,8 @@ def router_throughput(n_nodes: int = 700, deg: int = 4, n_shards: int = 2,
             assert st["router_syncs"] == 0, st
             assert st["router_host_dict_ops"] == 0, st
         rows.append((f"router/{name}", us[name],
-                     f"phi={ss.phi} shards={n_shards} "
+                     f"phi={ss.phi} ratio={ss.compression_ratio():.3f} "
+                     f"shards={n_shards} "
                      f"overflows={ss.router_overflows} "
                      f"drain_rounds={st['router_drain_rounds']} "
                      f"syncs={ss.router_syncs} "
@@ -394,16 +395,52 @@ def query_microbench(n_nodes: int = 300, deg: int = 4, n_shards: int = 2,
     return rows
 
 
+def policy_summary(n_nodes: int = 400, deg: int = 4) -> List[Row]:
+    """Beyond-paper (PR 8): per-policy compression/throughput of the
+    batched engine on one FD stream.
+
+    One row per proposal x objective pair, named ``summary/ratio-<triple>``
+    so the committed ``BENCH_router.json`` baseline gates BOTH directions
+    through ``run.py --compare``: a policy whose step got slower trips the
+    us_per_call tolerance, and the achieved compression ratio rides in the
+    derived column for PR-over-PR eyeballing (ratios are seeded-stream
+    deterministic, not a tolerance gate).  The weighted rows price
+    corrections by hashed node weights (``weight_levels=3``), so their phi
+    is the weighted objective — comparable release over release, not
+    against the exact rows.
+    """
+    rows: List[Row] = []
+    stream = _stream(n_nodes, deg, seed=11)
+    for prop in ("minhash", "magsdm"):
+        for obj, levels in (("exact", 0), ("weighted", 3)):
+            cfg = EngineConfig(n_cap=2048, m_cap=1 << 14, d_cap=64,
+                               sn_cap=48, c=24, batch=64, escape=0.2,
+                               proposal=prop, objective=obj,
+                               weight_levels=levels)
+            bs = BatchedSummarizer(cfg)
+            bs.process(stream[:cfg.batch])   # compile outside the clock
+            t0 = time.time()
+            bs.process(stream[cfg.batch:])
+            _ = bs.phi                       # sync before stopping the clock
+            us = 1e6 * (time.time() - t0) / (len(stream) - cfg.batch)
+            rows.append((f"summary/ratio-{prop}-{obj}", us,
+                         f"ratio={bs.compression_ratio():.3f} phi={bs.phi} "
+                         f"edges={bs.num_edges}"))
+    return rows
+
+
 def smoke() -> List[Row]:
     """Tiny-config subset for CI: exercises both routing modes end to end
-    (including the lockstep phi assertion), the probe microbenchmark, and
-    the online query path in well under a minute."""
+    (including the lockstep phi assertion), the probe microbenchmark, the
+    online query path, and the per-policy summary rows in well under a
+    minute."""
     return (router_throughput(n_nodes=120, deg=3, n_shards=2, chunk=128)
             + probe_microbench(cap=1024, batch=128, iters=50)
             + query_microbench(n_nodes=120, deg=3, n_shards=2, chunk=128,
-                               batch_q=64, iters=5))
+                               batch_q=64, iters=5)
+            + policy_summary(n_nodes=120, deg=3))
 
 
 ALL = [fig4_speed, fig5_compression, fig1c_scalability, fig6_parameters,
        fig7a_graph_properties, engine_throughput, router_throughput,
-       probe_microbench, query_microbench]
+       probe_microbench, query_microbench, policy_summary]

@@ -14,8 +14,10 @@ state.
 This example is CI-smoked (`.github/workflows/ci.yml`), so it cannot
 drift from the real API.
 
-Run:  PYTHONPATH=src python examples/summarize_stream.py [n_nodes]
+Run:  PYTHONPATH=src python examples/summarize_stream.py [n_nodes] \
+          [--proposal {minhash,magsdm}] [--objective {exact,weighted}]
 """
+import argparse
 import sys
 import time
 from pathlib import Path
@@ -24,11 +26,23 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.checkpoint import checkpointer
 from repro.core.engine import EngineConfig, ShardedSummarizer
+from repro.core.engine.state import OBJECTIVES, PROPOSALS
 from repro.dist.router import DEFAULT_REPLICA_EXEC
 from repro.graph.streams import (barabasi_albert_edges,
                                  edges_to_fully_dynamic_stream)
 
-n_nodes = int(sys.argv[1]) if len(sys.argv) > 1 else 2000
+# policy defaults come FROM EngineConfig so this example cannot drift from
+# the engine (same contract as repro/launch/stream.py)
+_dflt = EngineConfig()
+ap = argparse.ArgumentParser()
+ap.add_argument("n_nodes", type=int, nargs="?", default=2000)
+ap.add_argument("--proposal", choices=list(PROPOSALS), default=_dflt.proposal)
+ap.add_argument("--objective", choices=list(OBJECTIVES),
+                default=_dflt.objective)
+ap.add_argument("--weight-levels", type=int, default=_dflt.weight_levels)
+args = ap.parse_args()
+
+n_nodes = args.n_nodes
 edges = barabasi_albert_edges(n_nodes, 4, seed=0)
 stream = edges_to_fully_dynamic_stream(edges, delete_prob=0.1, seed=1)
 print(f"stream: {len(stream)} changes over {n_nodes} nodes")
@@ -37,7 +51,11 @@ print(f"stream: {len(stream)} changes over {n_nodes} nodes")
 # (src/repro/dist/README.md)
 cfg = EngineConfig(n_cap=1 << max(8, (2 * n_nodes).bit_length()),
                    m_cap=1 << max(10, (2 * len(stream)).bit_length()),
-                   d_cap=64, sn_cap=48, c=24, batch=64, escape=0.2)
+                   d_cap=64, sn_cap=48, c=24, batch=64, escape=0.2,
+                   proposal=args.proposal, objective=args.objective,
+                   weight_levels=args.weight_levels)
+print(f"policy: proposal={cfg.proposal} objective={cfg.objective} "
+      f"commit={cfg.commit}")
 ss = ShardedSummarizer(cfg, n_shards=2, router_chunk=512)
 assert ss.routing == "device" and ss.sync_free and ss.pipeline
 # the constructor resolves replica_exec=None to the backend-aware default

@@ -37,8 +37,18 @@ def state_live_edges(state: EngineState) -> Set[Tuple[int, int]]:
     return {(int(a), int(b)) for a, b in zip(k1[live], k2[live]) if a < b}
 
 
-def state_materialize(state: EngineState) -> SummaryOutput:
-    """Derive (G*, P, C+, C-) from counts + membership (optimal encoding)."""
+def state_materialize(state: EngineState,
+                      cfg: EngineConfig | None = None) -> SummaryOutput:
+    """Derive (G*, P, C+, C-) from counts + membership (optimal encoding).
+
+    Decoding is lossless under EVERY objective — the encoding always
+    reproduces exactly the live edge set.  The objective only decides
+    which side of the per-pair superedge/corrections rule is cheaper:
+    pass ``cfg`` so a weighted-objective state picks modes by
+    ``is_superedge(W, TW)`` (the rule its ``phi`` was accounted under)
+    instead of the unweighted counts.
+    """
+    weighted = cfg is not None and cfg.objective == "weighted"
     n2s = np.asarray(state.n2s)
     ssize = np.asarray(state.ssize)
     seen = n2s >= 0
@@ -54,6 +64,18 @@ def state_materialize(state: EngineState) -> SummaryOutput:
     live = k1 >= 0
     edges = state_live_edges(state)
 
+    if weighted:
+        from repro.core.reference.weights import host_node_weight
+        wmap = {}
+        wk1 = np.asarray(state.weab.k1)
+        wlive = wk1 >= 0
+        for a, b, w in zip(wk1[wlive], np.asarray(state.weab.k2)[wlive],
+                           np.asarray(state.weab.val)[wlive]):
+            wmap[(int(a), int(b))] = int(w)
+
+        def w_of(u: int) -> int:
+            return host_node_weight(u, cfg.weight_levels)
+
     superedges: Set[Tuple[int, int]] = set()
     c_plus: Set[Tuple[int, int]] = set()
     c_minus: Set[Tuple[int, int]] = set()
@@ -64,7 +86,16 @@ def state_materialize(state: EngineState) -> SummaryOutput:
         pair_edges = [pq for pq in _pairs(members[a], members[b], a == b)]
         actual = [pq for pq in pair_edges if pq in edges]
         assert len(actual) == e, f"eab drift at pair {(a, b)}: {len(actual)} != {e}"
-        if is_superedge(e, t):
+        if weighted:
+            wab = wmap.get((a, b), 0)
+            w_actual = sum(w_of(p) * w_of(q) for (p, q) in actual)
+            assert w_actual == wab, \
+                f"weab drift at pair {(a, b)}: {w_actual} != {wab}"
+            tw = sum(w_of(p) * w_of(q) for (p, q) in pair_edges)
+            mode_super = is_superedge(wab, tw)
+        else:
+            mode_super = is_superedge(e, t)
+        if mode_super:
             superedges.add(pair_key(a, b))
             c_minus.update(pq for pq in pair_edges if pq not in edges)
         else:
@@ -73,7 +104,26 @@ def state_materialize(state: EngineState) -> SummaryOutput:
                          c_plus=c_plus, c_minus=c_minus)
 
 
-def state_phi_recomputed(state: EngineState) -> int:
+def state_phi_recomputed(state: EngineState,
+                         cfg: EngineConfig | None = None) -> int:
+    """Refold phi from the live pair table (weighted fold when ``cfg``
+    selects the weighted objective)."""
+    if cfg is not None and cfg.objective == "weighted":
+        k1 = np.asarray(state.weab.k1)
+        k2 = np.asarray(state.weab.k2)
+        val = np.asarray(state.weab.val)
+        wsum = np.asarray(state.wsum)
+        wsq = np.asarray(state.wsq)
+        live = k1 >= 0
+        tot = 0
+        for a, b, w in zip(k1[live], k2[live], val[live]):
+            a, b = int(a), int(b)
+            if a == b:
+                tw = (int(wsum[a]) ** 2 - int(wsq[a])) // 2
+            else:
+                tw = int(wsum[a]) * int(wsum[b])
+            tot += encoding_cost(int(w), tw)
+        return tot
     k1 = np.asarray(state.eab.k1)
     k2 = np.asarray(state.eab.k2)
     val = np.asarray(state.eab.val)
@@ -207,7 +257,10 @@ class BatchedSummarizer:
         """live+tombstone slot fraction per table (probe-chain health)."""
         from repro.core.engine.hashtable import TOMB
         out = {}
-        for name in ("adj", "epos", "eab", "snadj", "snpos"):
+        tables = ("adj", "epos", "eab", "snadj", "snpos")
+        if self.cfg.objective == "weighted":
+            tables += ("weab",)
+        for name in tables:
             t = getattr(self.state, name)
             k1 = np.asarray(t.k1)
             out[name] = float(((k1 >= 0) | (k1 == int(TOMB))).mean())
@@ -252,10 +305,10 @@ class BatchedSummarizer:
         return state_live_edges(self.state)
 
     def materialize(self) -> SummaryOutput:
-        return state_materialize(self.state)
+        return state_materialize(self.state, self.cfg)
 
     def phi_recomputed(self) -> int:
-        return state_phi_recomputed(self.state)
+        return state_phi_recomputed(self.state, self.cfg)
 
 
 # --------------------------------------------------------------------------- #
@@ -907,10 +960,11 @@ class ShardedSummarizer:
         assignment."""
         shards = []
         for s, st in enumerate(self.host_states()):
-            out = state_materialize(st)
+            out = state_materialize(st, self.cfg)
             shards.append(
                 _relabel_output(out, self._shard_rev(s), s * self.cfg.n_cap))
         return ShardedSummaryOutput(shards=shards)
 
     def phi_recomputed(self) -> int:
-        return sum(state_phi_recomputed(st) for st in self.host_states())
+        return sum(state_phi_recomputed(st, self.cfg)
+                   for st in self.host_states())

@@ -113,6 +113,47 @@ def canon(a: jax.Array, b: jax.Array) -> Tuple[jax.Array, jax.Array]:
 
 
 # --------------------------------------------------------------------------- #
+# weighted-objective quantities
+# --------------------------------------------------------------------------- #
+#
+# The "weighted" objective scores phi_w = |P| + sum_{C+} w(u)w(v)
+# + sum_{C-} w(u)w(v): a P entry still costs 1, but each correction costs
+# its pair weight (utility-weighted summarization, arxiv 2006.08949).  The
+# optimal per-pair rule generalizes VERBATIM: with W_AB the weight of live
+# edges and TW_AB the weight of all member pairs, the cheaper of
+# "corrections only" (W) and "superedge + negative corrections"
+# (1 + TW - W) is exactly ``cost(W, TW)``, and uniform weights give
+# W == E, TW == T — bit-identical to the exact objective.
+
+
+def node_weight(u: jax.Array, cfg: EngineConfig) -> jax.Array:
+    """w(u) = 1 + (hash(u) % weight_levels); all-ones when levels <= 1.
+
+    Hashed from the node id so weights need no storage or I/O plumbing.
+    ``repro.core.reference.weights.host_node_weight`` is the bit-exact
+    host mirror — keep them in sync.
+    """
+    u = jnp.asarray(u)
+    if cfg.weight_levels <= 1:
+        return jnp.ones(u.shape, jnp.int32)
+    h = rnd_u32(u.astype(jnp.uint32), jnp.uint32(0x5EED))
+    return (1 + (h % jnp.uint32(cfg.weight_levels))).astype(jnp.int32)
+
+
+def wtri(sw: jax.Array, sq: jax.Array) -> jax.Array:
+    """TW of a self-pair: sum over unordered member pairs of w(u)w(v)
+    = (SW^2 - SQ) / 2; equals ``tri(s)`` under uniform weights."""
+    return (sw * sw - sq) // 2
+
+
+def wt_of(st: EngineState, a: jax.Array, b: jax.Array,
+          same: jax.Array) -> jax.Array:
+    """TW_AB from the per-supernode weight sums (weighted objective)."""
+    return jnp.where(same, wtri(st.wsum[a], st.wsq[a]),
+                     st.wsum[a] * st.wsum[b])
+
+
+# --------------------------------------------------------------------------- #
 # supernode-pair count + SN adjacency maintenance
 # --------------------------------------------------------------------------- #
 
@@ -163,21 +204,42 @@ def pair_count_add(st: EngineState, a: jax.Array, b: jax.Array,
     return st
 
 
+def pair_weight_add(st: EngineState, a: jax.Array, b: jax.Array,
+                    delta: jax.Array, ok=True) -> EngineState:
+    """W_AB += delta (weighted objective only).
+
+    No SN side effects: weights are positive, so W_AB hits zero exactly
+    when E_AB does and ``pair_count_add``'s transitions own the slot
+    lists; this table only has to agree on liveness, which
+    ``remove_if_zero`` preserves.
+    """
+    ca, cb = canon(a, b)
+    weab, _ = ht_add(st.weab, ca, cb, delta, remove_if_zero=True, ok=ok)
+    return st._replace(weab=weab)
+
+
 # --------------------------------------------------------------------------- #
 # nodes and edges
 # --------------------------------------------------------------------------- #
 
 
-def ensure_node(st: EngineState, u: jax.Array, ok=True) -> EngineState:
+def ensure_node(st: EngineState, u: jax.Array, cfg: EngineConfig,
+                ok=True) -> EngineState:
     """Allocate a singleton supernode for u if unseen (masked under ~ok)."""
     need = ok & (st.n2s[u] < 0)
     top = st.free_top - 1
     sid = st.free[jnp.maximum(top, 0)]
-    return st._replace(
+    st = st._replace(
         n2s=st.n2s.at[u].set(jnp.where(need, sid, st.n2s[u])),
         ssize=st.ssize.at[sid].set(jnp.where(need, 1, st.ssize[sid])),
         free_top=jnp.where(need, top, st.free_top),
     )
+    if cfg.objective == "weighted":
+        w = node_weight(u, cfg)
+        st = st._replace(
+            wsum=st.wsum.at[sid].set(jnp.where(need, w, st.wsum[sid])),
+            wsq=st.wsq.at[sid].set(jnp.where(need, w * w, st.wsq[sid])))
+    return st
 
 
 def _adj_append(st: EngineState, u: jax.Array, v: jax.Array,
@@ -225,17 +287,25 @@ def _minh_recompute(st: EngineState, u: jax.Array, d_cap: int) -> jax.Array:
 
 
 def insert_edge(st: EngineState, u: jax.Array, v: jax.Array,
-                d_cap: int, ok=True) -> EngineState:
+                cfg: EngineConfig, ok=True) -> EngineState:
     u = jnp.where(ok, u, 0)
     v = jnp.where(ok, v, 0)
-    st = ensure_node(st, u, ok)
-    st = ensure_node(st, v, ok)
+    st = ensure_node(st, u, cfg, ok)
+    st = ensure_node(st, v, cfg, ok)
     a, b = st.n2s[u], st.n2s[v]
     ca, cb = canon(a, b)
-    e = ht_lookup(st.eab, ca, cb)
-    t = t_of(st.ssize[a], st.ssize[b], a == b)
-    st = st._replace(
-        phi=st.phi + jnp.where(ok, cost(e + 1, t) - cost(e, t), 0))
+    if cfg.objective == "weighted":
+        wuv = node_weight(u, cfg) * node_weight(v, cfg)
+        w = ht_lookup(st.weab, ca, cb)
+        tw = wt_of(st, a, b, a == b)
+        st = st._replace(
+            phi=st.phi + jnp.where(ok, cost(w + wuv, tw) - cost(w, tw), 0))
+        st = pair_weight_add(st, a, b, wuv, ok)
+    else:
+        e = ht_lookup(st.eab, ca, cb)
+        t = t_of(st.ssize[a], st.ssize[b], a == b)
+        st = st._replace(
+            phi=st.phi + jnp.where(ok, cost(e + 1, t) - cost(e, t), 0))
     st = pair_count_add(st, a, b, jnp.int32(1), ok)
     st = _adj_append(st, u, v, ok)
     st = _adj_append(st, v, u, ok)
@@ -248,15 +318,24 @@ def insert_edge(st: EngineState, u: jax.Array, v: jax.Array,
 
 
 def delete_edge(st: EngineState, u: jax.Array, v: jax.Array,
-                d_cap: int, ok=True) -> EngineState:
+                cfg: EngineConfig, ok=True) -> EngineState:
+    d_cap = cfg.d_cap
     u = jnp.where(ok, u, 0)
     v = jnp.where(ok, v, 0)
     a, b = st.n2s[u], st.n2s[v]
     ca, cb = canon(a, b)
-    e = ht_lookup(st.eab, ca, cb)
-    t = t_of(st.ssize[a], st.ssize[b], a == b)
-    st = st._replace(
-        phi=st.phi + jnp.where(ok, cost(e - 1, t) - cost(e, t), 0))
+    if cfg.objective == "weighted":
+        wuv = node_weight(u, cfg) * node_weight(v, cfg)
+        w = ht_lookup(st.weab, ca, cb)
+        tw = wt_of(st, a, b, a == b)
+        st = st._replace(
+            phi=st.phi + jnp.where(ok, cost(w - wuv, tw) - cost(w, tw), 0))
+        st = pair_weight_add(st, a, b, -wuv, ok)
+    else:
+        e = ht_lookup(st.eab, ca, cb)
+        t = t_of(st.ssize[a], st.ssize[b], a == b)
+        st = st._replace(
+            phi=st.phi + jnp.where(ok, cost(e - 1, t) - cost(e, t), 0))
     st = pair_count_add(st, a, b, jnp.int32(-1), ok)
     st = _adj_remove(st, u, v, ok)
     st = _adj_remove(st, v, u, ok)
@@ -342,9 +421,73 @@ def delta_phi_move(st: EngineState, y: jax.Array, target: jax.Array,
     return d, nbrs, nvalid
 
 
+def delta_phi_move_weighted(st: EngineState, y: jax.Array, target: jax.Array,
+                            is_fresh: jax.Array, cfg: EngineConfig,
+                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Weighted-objective :func:`delta_phi_move`: identical structure with
+    (E, T, sizes) replaced by (W, TW, weight sums).  Under uniform weights
+    every intermediate equals its exact counterpart, so dphi is
+    bit-identical (the property test in ``tests/test_policies.py``).
+    """
+    d_cap, sn_cap = cfg.d_cap, cfg.sn_cap
+    a = st.n2s[y]
+    wy = node_weight(y, cfg)
+    swa, sqa = st.wsum[a], st.wsq[a]
+    swb = jnp.where(is_fresh, 0, st.wsum[target])
+    sqb = jnp.where(is_fresh, 0, st.wsq[target])
+
+    nbrs, nvalid = neighbor_slots(st, y, d_cap)
+    nsid = jnp.where(nvalid, st.n2s[jnp.clip(nbrs, 0)], -1)
+    nw = jnp.where(nvalid, node_weight(jnp.clip(nbrs, 0), cfg), 0)
+
+    sl = jnp.arange(sn_cap, dtype=jnp.int32)
+    sn_a = jnp.where(sl < st.sndeg[a],
+                     ht_lookup_batch(st.snadj, jnp.full((sn_cap,), a, jnp.int32),
+                                     sl, default=-1), -1)
+    sndeg_b = jnp.where(is_fresh, 0, st.sndeg[target])
+    sn_b = jnp.where(sl < sndeg_b,
+                     ht_lookup_batch(st.snadj,
+                                     jnp.full((sn_cap,), target, jnp.int32),
+                                     sl, default=-1), -1)
+
+    xs = jnp.concatenate([nsid, sn_a, sn_b])            # [L]
+    first = _first_occurrence(xs)
+    is_ab = (xs == a) | (xs == target)
+    ok = (xs >= 0) & first & ~is_ab
+
+    # hw[X] = w(y) * sum of w(nbr) over N(y) ∩ X  (weighted h[X])
+    hw = wy * (jnp.where(xs[:, None] == nsid[None, :], nw[None, :], 0)
+               .sum(axis=1).astype(jnp.int32))
+    swx = st.wsum[jnp.clip(xs, 0)]
+    xa = jnp.minimum(a, xs)
+    xb = jnp.maximum(a, xs)
+    w_ax = ht_lookup_batch(st.weab, xa, xb)
+    ta, tb = jnp.minimum(target, xs), jnp.maximum(target, xs)
+    w_bx = ht_lookup_batch(st.weab, ta, tb)
+
+    d_gen = (cost(w_ax - hw, (swa - wy) * swx) - cost(w_ax, swa * swx)
+             + cost(w_bx + hw, (swb + wy) * swx) - cost(w_bx, swb * swx))
+    d = jnp.sum(jnp.where(ok, d_gen, 0))
+
+    # special pairs (A,A), (B,B), (A,B)
+    hw_a = wy * jnp.sum(jnp.where(nsid == a, nw, 0)).astype(jnp.int32)
+    hw_b = wy * jnp.sum(jnp.where(nsid == target, nw, 0)).astype(jnp.int32)
+    w_aa = ht_lookup(st.weab, a, a)
+    w_bb = jnp.where(is_fresh, 0, ht_lookup(st.weab, target, target))
+    pa, pb = canon(a, target)
+    w_ab = jnp.where(is_fresh, 0, ht_lookup(st.weab, pa, pb))
+    d += (cost(w_aa - hw_a, wtri(swa - wy, sqa - wy * wy))
+          - cost(w_aa, wtri(swa, sqa)))
+    d += (cost(w_bb + hw_b, wtri(swb + wy, sqb + wy * wy))
+          - cost(w_bb, wtri(swb, sqb)))
+    d += (cost(w_ab - hw_b + hw_a, (swa - wy) * (swb + wy))
+          - cost(w_ab, swa * swb))
+    return d, nbrs, nvalid
+
+
 def apply_move(st: EngineState, y: jax.Array, target: jax.Array,
                dphi: jax.Array, nbrs: jax.Array, nvalid: jax.Array,
-               ok=True) -> EngineState:
+               cfg: EngineConfig, ok=True) -> EngineState:
     """Commit the move (target sid must already be allocated by the caller).
 
     Masked under ``~ok``: the neighbor loop still runs its fixed ``d_cap``
@@ -353,13 +496,20 @@ def apply_move(st: EngineState, y: jax.Array, target: jax.Array,
     y = jnp.where(ok, y, 0)
     target = jnp.where(ok, target, 0)
     a = jnp.where(ok, st.n2s[y], 0)
+    weighted = cfg.objective == "weighted"
+    wy = node_weight(y, cfg)
 
     def body(i, st):
         w_ok = ok & nvalid[i]
         w = jnp.where(w_ok, nbrs[i], 0)
         sw = st.n2s[w]
         st = pair_count_add(st, a, sw, jnp.int32(-1), w_ok)
-        return pair_count_add(st, target, sw, jnp.int32(1), w_ok)
+        st = pair_count_add(st, target, sw, jnp.int32(1), w_ok)
+        if weighted:
+            wyv = wy * node_weight(w, cfg)
+            st = pair_weight_add(st, a, sw, -wyv, w_ok)
+            st = pair_weight_add(st, target, sw, wyv, w_ok)
+        return st
 
     # nvalid is a prefix mask (slot < deg), so a dynamic trip count visits
     # exactly the valid slots — and zero of them on a masked call
@@ -371,6 +521,12 @@ def apply_move(st: EngineState, y: jax.Array, target: jax.Array,
         n2s=st.n2s.at[y].set(jnp.where(ok, target, st.n2s[y])),
         ssize=ssize,
         phi=st.phi + jnp.where(ok, dphi, 0))
+    if weighted:
+        dw = jnp.where(ok, wy, 0)
+        dq = jnp.where(ok, wy * wy, 0)
+        st = st._replace(
+            wsum=st.wsum.at[a].add(-dw).at[target].add(dw),
+            wsq=st.wsq.at[a].add(-dq).at[target].add(dq))
 
     # a emptied -> push it back on the free stack (masked write otherwise)
     push = ok & (ssize[a] == 0)
@@ -391,8 +547,19 @@ def alloc_sid(st: EngineState, ok=True) -> Tuple[EngineState, jax.Array]:
 # --------------------------------------------------------------------------- #
 
 
-def recompute_phi(st: EngineState) -> jax.Array:
-    """Fold the optimal-encoding cost over all live E_AB entries."""
+def recompute_phi(st: EngineState,
+                  cfg: EngineConfig | None = None) -> jax.Array:
+    """Fold the optimal-encoding cost over all live pair entries.
+
+    Uses the weighted table/quantities when ``cfg`` selects the weighted
+    objective; the exact E_AB fold otherwise.
+    """
+    if cfg is not None and cfg.objective == "weighted":
+        live = st.weab.k1 >= 0
+        a = jnp.clip(st.weab.k1, 0)
+        b = jnp.clip(st.weab.k2, 0)
+        tw = wt_of(st, a, b, a == b)
+        return jnp.sum(jnp.where(live, cost(st.weab.val, tw), 0))
     live = st.eab.k1 >= 0
     a = jnp.clip(st.eab.k1, 0)
     b = jnp.clip(st.eab.k2, 0)

@@ -1,0 +1,112 @@
+"""Swappable Alg.-1 policies: proposal / objective / commit rule.
+
+The trial engine (:mod:`repro.core.engine.trial`) is a fixed predicated
+skeleton — sample TP, plan a candidate move, score it, commit — and this
+module supplies the three plug points as plain Python registries keyed by
+the static ``EngineConfig`` fields:
+
+* ``PROPOSALS[cfg.proposal]`` — candidate destination generation:
+  ``(st, y, tp, tp_minh, seed, cfg) -> (cand_target, cand_ok)``.
+* ``OBJECTIVES[cfg.objective]`` — move scoring:
+  ``(st, y, target, is_fresh, cfg) -> (dphi, nbrs, nvalid)``.
+* ``COMMIT_RULES[cfg.commit]`` — accept rule: ``(dphi, cfg) -> bool``.
+
+Dispatch is resolved at TRACE time (the config fields are static and part
+of every compile-cache key), so a compiled step contains exactly one
+policy triple and zero ``lax.cond`` — the cond-free tripwire in
+``tests/test_differential.py`` runs over the whole registry matrix.
+Every policy body must follow the ops-layer predication contract: pure
+masked data flow, reads allowed on garbage lanes, commits gated by the
+caller's predicates.
+
+The canonical name tuples live in ``state.py`` (this module imports the
+state module, not vice versa); ``tests/test_policies.py`` pins the
+registry keys to them.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine.ops import (delta_phi_move, delta_phi_move_weighted,
+                                   rnd_below)
+from repro.core.engine.state import (COMMIT_RULES as COMMIT_RULE_NAMES,
+                                     NO_CLUSTER, EngineConfig, EngineState)
+from repro.core.engine.state import OBJECTIVES as OBJECTIVE_NAMES
+from repro.core.engine.state import PROPOSALS as PROPOSAL_NAMES
+
+
+def propose_minhash(st: EngineState, y: jax.Array, tp: jax.Array,
+                    tp_minh: jax.Array, seed: jax.Array, cfg: EngineConfig,
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """The paper's sampler: CP(y) = TP(u) ∩ R(y) via min-hash cluster
+    equality, uniform pick among the matches (Alg. 1 step 4)."""
+    a = st.n2s[y]
+    my = st.minh[y]
+    cp_mask = (tp_minh == my) & (my != NO_CLUSTER)
+    n_cp = jnp.sum(cp_mask).astype(jnp.int32)
+    pick = rnd_below(seed, jnp.uint32(4), n_cp)
+    # index of the pick-th True in cp_mask
+    csum = jnp.cumsum(cp_mask.astype(jnp.int32)) - 1
+    zidx = jnp.argmax((csum == pick) & cp_mask)
+    z = tp[zidx]
+    cand_target = st.n2s[z]
+    return cand_target, (n_cp > 0) & (cand_target != a)
+
+
+def propose_magsdm(st: EngineState, y: jax.Array, tp: jax.Array,
+                   tp_minh: jax.Array, seed: jax.Array, cfg: EngineConfig,
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Mags-DM-style dense-neighborhood grouping: the MODAL supernode
+    among the TP samples (most co-sampled destination), not a uniform
+    pick from a min-hash cluster.
+
+    Deterministic given the samples — the randomness lives entirely in TP
+    and the escape draw.  Fixed-shape analog of Mags-DM's grouping stage;
+    the deviation vs the published heuristic is audited in
+    ``docs/KNOWN_ISSUES.md``.
+    """
+    a = st.n2s[y]
+    nsid = st.n2s[tp]
+    cnt = (nsid[None, :] == nsid[:, None]).sum(axis=1).astype(jnp.int32)
+    elig = nsid != a
+    score = jnp.where(elig, cnt, -1)
+    cand_target = nsid[jnp.argmax(score)]
+    return cand_target, (jnp.sum(elig) > 0) & (cand_target != a)
+
+
+def commit_saving(dphi: jax.Array, cfg: EngineConfig) -> jax.Array:
+    """Move-if-saved (the paper's rule): accept iff dphi <= 0."""
+    return dphi <= 0
+
+
+def commit_threshold(dphi: jax.Array, cfg: EngineConfig) -> jax.Array:
+    """Accept iff dphi <= cfg.commit_margin.
+
+    margin > 0 tolerates small regressions (annealing-style exploration);
+    margin < 0 demands strict improvement.  ``commit_margin=0`` is
+    exactly ``saving``.
+    """
+    return dphi <= jnp.int32(cfg.commit_margin)
+
+
+PROPOSALS = {
+    "minhash": propose_minhash,
+    "magsdm": propose_magsdm,
+}
+
+OBJECTIVES = {
+    "exact": delta_phi_move,
+    "weighted": delta_phi_move_weighted,
+}
+
+COMMIT_RULES = {
+    "saving": commit_saving,
+    "threshold": commit_threshold,
+}
+
+assert tuple(PROPOSALS) == PROPOSAL_NAMES
+assert tuple(OBJECTIVES) == OBJECTIVE_NAMES
+assert tuple(COMMIT_RULES) == COMMIT_RULE_NAMES

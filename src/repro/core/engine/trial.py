@@ -7,8 +7,15 @@ input node, the paper's trial loop (Alg. 1) in fixed shape:
      adjacency (the TPU-native replacement of GetRandomNeighbor, Thm. 1-3).
   2. TN filter: keep testing node w with probability 1/deg(w).
   3. Corrective escape with probability ``e`` -> fresh singleton.
-  4. Otherwise CP(y) = TP(u) ∩ R(y) via min-hash equality; uniform candidate.
-  5. Accept iff the closed-form dphi <= 0 (Move if Saved, Stay otherwise).
+  4. Otherwise a candidate destination from the PROPOSAL policy (default:
+     CP(y) = TP(u) ∩ R(y) via min-hash equality; uniform candidate).
+  5. Score with the OBJECTIVE policy (default: exact closed-form dphi) and
+     accept per the COMMIT policy (default: dphi <= 0, Move if Saved).
+
+Steps 4-5 dispatch through ``repro.core.engine.policies`` on the static
+``EngineConfig`` policy triple — resolved at trace time, so every
+registered combination compiles cond-free and the default triple is
+bit-identical to the historical hard-coded engine.
 
 Capacity guards (deg <= d_cap, |SN| <= sn_cap) skip — never corrupt — trials
 that exceed the fixed shapes; skips are counted in ``n_skipped``.
@@ -54,13 +61,13 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import policies
 from repro.core.engine.hashtable import (ht_lookup_batch,
                                          resolve_trial_backend,
                                          trial_backend_scope)
 from repro.core.engine.ops import (alloc_sid, apply_move, delete_edge,
-                                   delta_phi_move, insert_edge, rnd_below,
-                                   rnd_u01, rnd_u32)
-from repro.core.engine.state import NO_CLUSTER, EngineConfig, EngineState
+                                   insert_edge, rnd_below, rnd_u01, rnd_u32)
+from repro.core.engine.state import EngineConfig, EngineState
 
 
 def pwhen(pred: jax.Array, fn, carry):
@@ -117,23 +124,27 @@ def _one_trial(st: EngineState, y: jax.Array, tp: jax.Array,
     ``pwhen`` body promotes the inner region's closed-over state into the
     outer loop's carry, reintroducing exactly the full-state copies the
     small carries avoid.
+
+    **Policy dispatch.**  The candidate scheme, the dphi objective, and
+    the accept rule are resolved HERE, at trace time, from the static
+    config fields (``repro.core.engine.policies``) — plain Python lookups,
+    so a compiled step bakes in exactly one policy triple and the
+    cond-free invariant holds for every registered combination.  The
+    default triple reproduces the pre-policy-layer expressions (and PRNG
+    counters) exactly, keeping it bit-identical to the historical engine.
     """
     d_cap = cfg.d_cap
+    propose = policies.PROPOSALS[cfg.proposal]
+    objective = policies.OBJECTIVES[cfg.objective]
+    accept = policies.COMMIT_RULES[cfg.commit]
 
     def plan(carry):
         a = st.n2s[y]
         esc = rnd_u01(seed, jnp.uint32(3)) <= cfg.escape
 
-        # candidate selection: CP(y) = TP(u) ∩ R(y) (min-hash cluster match)
-        my = st.minh[y]
-        cp_mask = (tp_minh == my) & (my != NO_CLUSTER)
-        n_cp = jnp.sum(cp_mask).astype(jnp.int32)
-        pick = rnd_below(seed, jnp.uint32(4), n_cp)
-        # index of the pick-th True in cp_mask
-        csum = jnp.cumsum(cp_mask.astype(jnp.int32)) - 1
-        zidx = jnp.argmax((csum == pick) & cp_mask)
-        z = tp[zidx]
-        cand_target = st.n2s[z]
+        # candidate selection (proposal policy); counters 4.. are reserved
+        # for the proposal's own draws
+        cand_target, cand_ok = propose(st, y, tp, tp_minh, seed, cfg)
 
         fresh_sid = st.free[jnp.maximum(st.free_top - 1, 0)]
         target = jnp.where(esc, fresh_sid, cand_target)
@@ -142,8 +153,7 @@ def _one_trial(st: EngineState, y: jax.Array, tp: jax.Array,
                   & (st.sndeg[a] <= cfg.sn_cap)
                   & (esc | (st.sndeg[cand_target] <= cfg.sn_cap))
                   & ((~esc) | (st.free_top > 0)))
-        sem_ok = jnp.where(esc, st.ssize[a] > 1,
-                           (n_cp > 0) & (cand_target != a))
+        sem_ok = jnp.where(esc, st.ssize[a] > 1, cand_ok)
         ok = pred & cap_ok & sem_ok
         return esc, a, target, ok, cap_ok
 
@@ -156,15 +166,15 @@ def _one_trial(st: EngineState, y: jax.Array, tp: jax.Array,
         # masked data flow: dphi of the candidate move (a -> a when the
         # trial is masked, so every gather stays in bounds)
         tgt_s = jnp.clip(jnp.where(ok, target, a), 0)
-        return delta_phi_move(st, y, tgt_s, esc, cfg)
+        return objective(st, y, tgt_s, esc, cfg)
 
     c2 = (z32, jnp.full((d_cap,), -1, jnp.int32), jnp.zeros((d_cap,), bool))
     dphi, nbrs, nvalid = pwhen(ok, eval_phi, c2)
-    commit = ok & (dphi <= 0)
+    commit = ok & accept(dphi, cfg)
 
     def commit_tail(st: EngineState) -> EngineState:
         st = alloc_sid(st, ok=commit & esc)[0]
-        st = apply_move(st, y, target, dphi, nbrs, nvalid, ok=commit)
+        st = apply_move(st, y, target, dphi, nbrs, nvalid, cfg, ok=commit)
         return st._replace(
             n_accept=st.n_accept + jnp.where(commit, 1, 0).astype(jnp.int32))
 
@@ -212,10 +222,10 @@ def _apply_change(st: EngineState, u: jax.Array, v: jax.Array,
     do_ins = valid & ins
     do_del = valid & ~ins
     st = _pregion(do_ins,
-                  lambda s: insert_edge(s, u, v, cfg.d_cap, ok=do_ins),
+                  lambda s: insert_edge(s, u, v, cfg, ok=do_ins),
                   st, dense)
     st = _pregion(do_del,
-                  lambda s: delete_edge(s, u, v, cfg.d_cap, ok=do_del),
+                  lambda s: delete_edge(s, u, v, cfg, ok=do_del),
                   st, dense)
     return st
 

@@ -1,13 +1,16 @@
 from repro.core.reference.algorithms import (ALGORITHMS, MoSSo, MoSSoGreedy,
-                                             MoSSoMCMC, MoSSoSimple,
-                                             StreamingSummarizer)
-from repro.core.reference.dynamic_summary import DynamicSummary
+                                             MoSSoMags, MoSSoMCMC,
+                                             MoSSoSimple, StreamingSummarizer)
+from repro.core.reference.dynamic_summary import (DynamicSummary,
+                                                  WeightedDynamicSummary)
 from repro.core.reference.minhash import MinHashClusters
 from repro.core.reference.neighbor_sampler import get_random_neighbors
 from repro.core.reference.summary_query import SummaryQueryOracle
+from repro.core.reference.weights import host_node_weight
 
 __all__ = [
-    "ALGORITHMS", "MoSSo", "MoSSoGreedy", "MoSSoMCMC", "MoSSoSimple",
-    "StreamingSummarizer", "DynamicSummary", "MinHashClusters",
-    "get_random_neighbors", "SummaryQueryOracle",
+    "ALGORITHMS", "MoSSo", "MoSSoGreedy", "MoSSoMCMC", "MoSSoMags",
+    "MoSSoSimple", "StreamingSummarizer", "DynamicSummary",
+    "WeightedDynamicSummary", "MinHashClusters", "get_random_neighbors",
+    "SummaryQueryOracle", "host_node_weight",
 ]

@@ -99,7 +99,7 @@ class MoSSoGreedy(StreamingSummarizer):
         s = self.s
         if u not in s.n2s:
             return
-        h = s.neighbor_hist(u)
+        h = s.move_hist(u)
         best_d, best_t = 0, None
         for sid in list(s.members):
             if sid == s.n2s[u]:
@@ -163,7 +163,7 @@ class MoSSoMCMC(StreamingSummarizer):
             if s_z == a:
                 continue
             h = s.neighbor_hist(y)
-            d = s.delta_phi(y, s_z, h)
+            d = s.delta_phi(y, s_z)   # h is count-based; delta_phi self-hists
             # Eq. 5 forward/backward proposal mixtures over S_x of y's nbrs.
             k = len(s.members)
             p_sx = {sid: cnt / len(nbrs_y) for sid, cnt in h.items()}
@@ -250,9 +250,52 @@ class MoSSo(StreamingSummarizer):
                 self._attempt(y, s.n2s[z])
 
 
+class MoSSoMags(StreamingSummarizer):
+    """Mags-DM-style candidate scheme on the MoSSo trial skeleton.
+
+    Host reference for the engine's ``proposal="magsdm"``: the candidate
+    destination is the MODAL supernode among the TP samples (the densest
+    co-sampled destination, ties to the smallest sid), replacing the
+    min-hash CP(y) pick.  TP sampling, the 1/deg testing filter, the
+    corrective escape, and Move-if-Saved acceptance are unchanged.  The
+    deviation vs the published Mags-DM heuristic is audited in
+    ``docs/KNOWN_ISSUES.md``.
+    """
+
+    name = "mosso-mags"
+
+    def __init__(self, seed: int = 0, escape: float = 0.3, c: int = 120) -> None:
+        super().__init__(seed)
+        self.escape = escape
+        self.c = c
+
+    def trials(self, u: int) -> None:
+        s = self.s
+        if u not in s.n2s or s.deg.get(u, 0) == 0:
+            return
+        tp = get_random_neighbors(s, u, self.c, self.rng)
+        for y in tp:
+            if self.rng.random() * s.deg.get(y, 1) > 1.0:
+                continue  # 1/deg(w) testing filter
+            if self.rng.random() <= self.escape:
+                self._attempt(y, None)
+            else:
+                a = s.n2s[y]
+                cnt: Dict[int, int] = {}
+                for z in tp:
+                    sz = s.n2s[z]
+                    if sz != a:
+                        cnt[sz] = cnt.get(sz, 0) + 1
+                if not cnt:
+                    continue
+                target = max(cnt, key=lambda sid: (cnt[sid], -sid))
+                self._attempt(y, target)
+
+
 ALGORITHMS = {
     "greedy": MoSSoGreedy,
     "mcmc": MoSSoMCMC,
     "simple": MoSSoSimple,
     "mosso": MoSSo,
+    "mags": MoSSoMags,
 }

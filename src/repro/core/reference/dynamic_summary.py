@@ -20,14 +20,31 @@ Faithfulness notes
 * ``delta_phi(y, target)`` is the closed-form objective change of a move used
   by all algorithm variants; tests check it equals the phi difference of
   actually applying the move.
+
+Objective hooks
+---------------
+All phi accounting below is written in the WEIGHTED generalization — per
+pair, the live weight ``W_AB`` against the total pair weight ``TW_AB``,
+with the optimal rule ``cost(W, TW) = min(W, TW - W + 1)`` unchanged —
+routed through overridable ``_w*`` hooks.  The base class's hooks return
+the unweighted counts (w(u) = 1, W = E, TW = T), making it *literally the
+same integers* as the historical exact-objective code; the
+:class:`WeightedDynamicSummary` subclass supplies hashed node weights and
+is the host reference for the engine's ``objective="weighted"``
+(``tests/test_policies.py`` pins the uniform-weights bit-identity).
 """
 from __future__ import annotations
 
 import itertools
-from typing import Dict, Iterable, List, Optional, Set, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Set, Tuple
 
 from repro.core.summary import (Pair, SummaryOutput, encoding_cost,
                                 is_superedge, pair_key, t_count)
+
+
+def _wtri(sw: int, sq: int) -> int:
+    """Total self-pair weight (SW^2 - SQ) / 2; equals T(s, s) when w == 1."""
+    return (sw * sw - sq) // 2
 
 
 class DynamicSummary:
@@ -73,6 +90,38 @@ class DynamicSummary:
 
     def _count(self, a: int, b: int) -> int:
         return self.eab.get(pair_key(a, b), 0)
+
+    # ------------------------------------------------------- objective hooks
+    # The base hooks realize the exact objective: weight 1 per node, so
+    # every weighted quantity collapses to its count (same ints, same phi).
+    def _w(self, u: int) -> int:
+        """Node weight w(u)."""
+        return 1
+
+    def _wcount(self, a: int, b: int) -> int:
+        """W_AB = sum of w(u)w(v) over live edges of the pair."""
+        return self._count(a, b)
+
+    def _bump_wcount(self, a: int, b: int, delta: int) -> None:
+        """Maintain W_AB on edge add/remove (no-op when W == E)."""
+
+    def _wsize(self, sid: int) -> int:
+        """SW = sum of member weights."""
+        return len(self.members.get(sid, ()))
+
+    def _wsq(self, sid: int) -> int:
+        """SQ = sum of squared member weights."""
+        return len(self.members.get(sid, ()))
+
+    def _wt(self, a: int, b: int) -> int:
+        """TW_AB = total pair weight (T under uniform weights)."""
+        return self._t(a, b)
+
+    def move_hist(self, y: int) -> Dict[int, int]:
+        """Per-supernode mass of y's edges under the objective: the input
+        ``h`` of :meth:`delta_phi` (weighted: w(y)w(nbr) sums; exact:
+        :meth:`neighbor_hist` counts)."""
+        return self.neighbor_hist(y)
 
     def _member_pairs(self, a: int, b: int) -> Iterable[Pair]:
         if a == b:
@@ -122,8 +171,7 @@ class DynamicSummary:
         phi is *not* touched here: cost() is mode-independent (the min).
         """
         p = pair_key(a, b)
-        e = self._count(a, b)
-        want = is_superedge(e, self._t(a, b))
+        want = is_superedge(self._wcount(a, b), self._wt(a, b))
         have = p in self.P
         if want == have:
             return
@@ -153,30 +201,34 @@ class DynamicSummary:
 
     def _add_edge_encoding(self, u: int, v: int) -> None:
         a, b = self.n2s[u], self.n2s[v]
-        t = self._t(a, b)
-        e = self._count(a, b)
-        self.phi += encoding_cost(e + 1, t) - encoding_cost(e, t)
+        tw = self._wt(a, b)
+        w = self._wcount(a, b)
+        wuv = self._w(u) * self._w(v)
+        self.phi += encoding_cost(w + wuv, tw) - encoding_cost(w, tw)
         if pair_key(a, b) in self.P:
             self.cminus[u].discard(v)
             self.cminus[v].discard(u)
         else:
             self.cplus[u].add(v)
             self.cplus[v].add(u)
-        self._set_count(a, b, e + 1)
+        self._set_count(a, b, self._count(a, b) + 1)
+        self._bump_wcount(a, b, wuv)
         self._reencode(a, b)
 
     def _remove_edge_encoding(self, u: int, v: int) -> None:
         a, b = self.n2s[u], self.n2s[v]
-        t = self._t(a, b)
-        e = self._count(a, b)
-        self.phi += encoding_cost(e - 1, t) - encoding_cost(e, t)
+        tw = self._wt(a, b)
+        w = self._wcount(a, b)
+        wuv = self._w(u) * self._w(v)
+        self.phi += encoding_cost(w - wuv, tw) - encoding_cost(w, tw)
         if pair_key(a, b) in self.P:
             self.cminus[u].add(v)
             self.cminus[v].add(u)
         else:
             self.cplus[u].discard(v)
             self.cplus[v].discard(u)
-        self._set_count(a, b, e - 1)
+        self._set_count(a, b, self._count(a, b) - 1)
+        self._bump_wcount(a, b, -wuv)
         self._reencode(a, b)
 
     # ------------------------------------------------------------ stream ops
@@ -227,42 +279,43 @@ class DynamicSummary:
     def _pair_updates(self, y: int, target: int,
                       h: Optional[Dict[int, int]] = None,
                       ) -> Dict[Pair, Tuple[int, int, int, int]]:
-        """Per-pair (E_old, T_old, E_new, T_new) induced by moving y -> target.
+        """Per-pair (W_old, TW_old, W_new, TW_new) induced by moving
+        y -> target (counts E/T under the base hooks).
 
         ``target`` may be a not-yet-existing sid (escape to fresh singleton),
         signalled by target not in ``self.members``.
         """
         a = self.n2s[y]
-        sa = len(self.members[a])
-        sb = len(self.members.get(target, ())) if target in self.members else 0
+        wy = self._w(y)
+        swa, sqa = self._wsize(a), self._wsq(a)
+        fresh = target not in self.members
+        swb = 0 if fresh else self._wsize(target)
+        sqb = 0 if fresh else self._wsq(target)
         if h is None:
-            h = self.neighbor_hist(y)
-        sizes: Dict[int, int] = {}
-
-        def size(x: int) -> int:
-            if x == a or x == target:
-                raise AssertionError("use explicit sa/sb")
-            return len(self.members[x])
+            h = self.move_hist(y)
 
         out: Dict[Pair, Tuple[int, int, int, int]] = {}
         others = (set(self.sn.get(a, ())) | set(self.sn.get(target, ())) |
                   set(h)) - {a, target}
         for x in others:
-            sx = size(x)
-            e_ax = self._count(a, x)
-            out[pair_key(a, x)] = (e_ax, sa * sx, e_ax - h.get(x, 0), (sa - 1) * sx)
-            e_bx = self._count(target, x) if target in self.members else 0
-            out[pair_key(target, x)] = (e_bx, sb * sx, e_bx + h.get(x, 0), (sb + 1) * sx)
-        e_aa = self._count(a, a)
-        out[(a, a)] = (e_aa, t_count(sa, sa, True),
-                       e_aa - h.get(a, 0), t_count(sa - 1, sa - 1, True))
-        e_bb = self._count(target, target) if target in self.members else 0
-        out[(target, target)] = (e_bb, t_count(sb, sb, True),
-                                 e_bb + h.get(target, 0), t_count(sb + 1, sb + 1, True))
-        e_ab = self._count(a, target) if target in self.members else 0
-        out[pair_key(a, target)] = (e_ab, sa * sb,
-                                    e_ab - h.get(target, 0) + h.get(a, 0),
-                                    (sa - 1) * (sb + 1))
+            swx = self._wsize(x)
+            w_ax = self._wcount(a, x)
+            out[pair_key(a, x)] = (w_ax, swa * swx,
+                                   w_ax - h.get(x, 0), (swa - wy) * swx)
+            w_bx = 0 if fresh else self._wcount(target, x)
+            out[pair_key(target, x)] = (w_bx, swb * swx,
+                                        w_bx + h.get(x, 0), (swb + wy) * swx)
+        w_aa = self._wcount(a, a)
+        out[(a, a)] = (w_aa, _wtri(swa, sqa),
+                       w_aa - h.get(a, 0), _wtri(swa - wy, sqa - wy * wy))
+        w_bb = 0 if fresh else self._wcount(target, target)
+        out[(target, target)] = (w_bb, _wtri(swb, sqb),
+                                 w_bb + h.get(target, 0),
+                                 _wtri(swb + wy, sqb + wy * wy))
+        w_ab = 0 if fresh else self._wcount(a, target)
+        out[pair_key(a, target)] = (w_ab, swa * swb,
+                                    w_ab - h.get(target, 0) + h.get(a, 0),
+                                    (swa - wy) * (swb + wy))
         return out
 
     def delta_phi(self, y: int, target: int,
@@ -271,7 +324,8 @@ class DynamicSummary:
 
         This is the paper's "computing savings in the objective" step
         (Sect. 3.6.3): only pairs touching SN(S_y) ∪ SN(S_z) matter.
-        Pass a precomputed ``neighbor_hist(y)`` when scanning many candidates.
+        Pass a precomputed ``move_hist(y)`` when scanning many candidates
+        (NOT ``neighbor_hist`` — they differ under weighted objectives).
         """
         if target in self.members and self.n2s[y] == target:
             return 0
@@ -318,23 +372,29 @@ class DynamicSummary:
                 if q != y:
                     self.cminus[y].add(q)
                     self.cminus[q].add(y)
-        # 3. re-cost every pair of A and B: |T| changed with the sizes.
+        # 3. re-cost every pair of A and B: TW changed with the weight sums.
         touched = set()
         for x in list(self.sn.get(a, ())) + [a]:
             touched.add(pair_key(a, x))
         for x in list(self.sn.get(target, ())) + [target]:
             touched.add(pair_key(target, x))
+        wy = self._w(y)
+        dw = {a: wy, target: -wy}
+        dq = {a: wy * wy, target: -wy * wy}
         for (p, q) in touched:
-            e = self._count(p, q)
-            if e <= 0:
+            if self._count(p, q) <= 0:
                 continue
-            # phi was accounted with the OLD T; recompute with new sizes.
-            # Note: old T differs only for pairs involving a or target.
-            so_p = len(self.members[p]) + (1 if p == a else 0) - (1 if p == target else 0)
-            so_q = len(self.members[q]) + (1 if q == a else 0) - (1 if q == target else 0)
-            t_old = t_count(so_p, so_q, p == q)
-            t_new = self._t(p, q)
-            self.phi += encoding_cost(e, t_new) - encoding_cost(e, t_old)
+            # phi was accounted with the OLD TW; recompute with new sums.
+            # Note: old TW differs only for pairs involving a or target.
+            sw_p = self._wsize(p) + dw.get(p, 0)
+            sw_q = self._wsize(q) + dw.get(q, 0)
+            if p == q:
+                tw_old = _wtri(sw_p, self._wsq(p) + dq.get(p, 0))
+            else:
+                tw_old = sw_p * sw_q
+            tw_new = self._wt(p, q)
+            w = self._wcount(p, q)
+            self.phi += encoding_cost(w, tw_new) - encoding_cost(w, tw_old)
             self._reencode(p, q)
         # 4. drop A if emptied (all its counts are 0: y was its only member).
         if not self.members[a]:
@@ -364,14 +424,19 @@ class DynamicSummary:
         )
 
     def phi_recomputed(self) -> int:
-        """Independent phi from the E_AB counts (tests cross-check)."""
+        """Independent phi from the live pair table (tests cross-check).
+
+        Uses the objective hooks, so under the weighted subclass this
+        refolds ``cost(W, TW)`` — the weighted phi.
+        """
         tot = 0
-        for (a, b), e in self.eab.items():
-            tot += encoding_cost(e, self._t(a, b))
+        for (a, b) in self.eab:
+            tot += encoding_cost(self._wcount(a, b), self._wt(a, b))
         return tot
 
     def compression_ratio(self) -> float:
-        """(|P| + |C+| + |C-|) / |E|, the paper's Eq. (3)."""
+        """phi / |E| — Eq. (3) under the exact objective; the weighted
+        analog (objective mass per live edge) under weighted hooks."""
         if self.num_edges == 0:
             return 0.0
         return self.phi / self.num_edges
@@ -379,3 +444,70 @@ class DynamicSummary:
     def representation_size(self) -> int:
         """|V| + |P| + |C+| + |C-| (Thm. 4 memory measure)."""
         return len(self.n2s) + self.phi
+
+
+class WeightedDynamicSummary(DynamicSummary):
+    """Utility-weighted host reference (the engine's ``objective="weighted"``).
+
+    phi = |P| + sum_{C+} w(u)w(v) + sum_{C-} w(u)w(v): superedges cost 1,
+    corrections cost their pair weight, and the per-pair optimum is
+    ``cost(W_AB, TW_AB)`` with the same closed form as the exact rule
+    (arxiv 2006.08949's utility view).  Decoding stays LOSSLESS — weights
+    only shift which encoding mode each pair prefers.
+
+    ``node_weight`` defaults to the engine's hashed weights
+    (:func:`repro.core.reference.weights.host_node_weight` on the node id);
+    pass an explicit callable to weigh caller labels through an intern map
+    when differencing against device state.  ``weight_levels <= 1`` makes
+    every hook collapse to the base class — bit-identical to the exact
+    objective (the property test in ``tests/test_policies.py``).
+    """
+
+    def __init__(self, weight_levels: int = 0,
+                 node_weight: Optional[Callable[[int], int]] = None) -> None:
+        super().__init__()
+        if node_weight is None:
+            from repro.core.reference.weights import host_node_weight
+            node_weight = lambda u: host_node_weight(u, weight_levels)
+        self.weight_levels = weight_levels
+        self._node_weight = node_weight
+        self._wcache: Dict[int, int] = {}
+        self.wab: Dict[Pair, int] = {}               # pair -> W_AB (>0 only)
+
+    def _w(self, u: int) -> int:
+        w = self._wcache.get(u)
+        if w is None:
+            w = int(self._node_weight(u))
+            assert w >= 1, f"node weights must be positive, got w({u})={w}"
+            self._wcache[u] = w
+        return w
+
+    def _wcount(self, a: int, b: int) -> int:
+        return self.wab.get(pair_key(a, b), 0)
+
+    def _bump_wcount(self, a: int, b: int, delta: int) -> None:
+        p = pair_key(a, b)
+        new = self.wab.get(p, 0) + delta
+        if new:
+            self.wab[p] = new
+        else:
+            self.wab.pop(p, None)
+
+    def _wsize(self, sid: int) -> int:
+        return sum(self._w(u) for u in self.members.get(sid, ()))
+
+    def _wsq(self, sid: int) -> int:
+        return sum(self._w(u) ** 2 for u in self.members.get(sid, ()))
+
+    def _wt(self, a: int, b: int) -> int:
+        if a == b:
+            return _wtri(self._wsize(a), self._wsq(a))
+        return self._wsize(a) * self._wsize(b)
+
+    def move_hist(self, y: int) -> Dict[int, int]:
+        wy = self._w(y)
+        h: Dict[int, int] = {}
+        for n in self.neighbors(y):
+            s = self.n2s[n]
+            h[s] = h.get(s, 0) + wy * self._w(n)
+        return h

@@ -1,0 +1,35 @@
+"""Host mirror of the engine's hashed node weights (weighted objective).
+
+``repro.core.engine.ops.node_weight`` derives ``w(u) = 1 +
+(splitmix32(u + 0x5EED * GOLDEN) % weight_levels)`` on device; this module
+reproduces it bit-exactly in numpy uint32 arithmetic so host references
+and audits can weigh the same node identically.  Keep the two in sync.
+
+Note the engine hashes DENSE engine ids, not caller labels: a
+label-space reference must map labels through the front-end's intern
+order (``BatchedSummarizer._ids``) before calling ``host_node_weight``
+when comparing against device state.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_GOLDEN = np.uint32(0x9E3779B9)
+_SEED_CTR = np.uint32(0x5EED)
+
+
+def _splitmix32(x: np.uint32) -> np.uint32:
+    with np.errstate(over="ignore"):
+        x = (x ^ (x >> np.uint32(16))) * np.uint32(0x21F0AAAD)
+        x = (x ^ (x >> np.uint32(15))) * np.uint32(0x735A2D97)
+        return x ^ (x >> np.uint32(15))
+
+
+def host_node_weight(u: int, weight_levels: int) -> int:
+    """w(u) for an engine-id (or any int-keyed) node; 1 when levels <= 1."""
+    if weight_levels <= 1:
+        return 1
+    with np.errstate(over="ignore"):
+        x = np.uint32(np.int64(u) & 0xFFFFFFFF) + _SEED_CTR * _GOLDEN
+    h = _splitmix32(x)
+    return 1 + int(h % np.uint32(weight_levels))

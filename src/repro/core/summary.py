@@ -61,6 +61,17 @@ class SummaryOutput:
     def phi(self) -> int:
         return len(self.superedges) + len(self.c_plus) + len(self.c_minus)
 
+    def phi_weighted(self, node_weight) -> int:
+        """Utility-weighted objective of this representation: a superedge
+        still costs 1, but each correction costs its pair weight
+        ``w(u) * w(v)``.  With ``node_weight = lambda u: 1`` this equals
+        :attr:`phi`; it is what the weighted-objective engine/reference
+        maintain as their ``phi``.
+        """
+        corr = sum(node_weight(u) * node_weight(v)
+                   for s in (self.c_plus, self.c_minus) for (u, v) in s)
+        return len(self.superedges) + corr
+
     def decode_edges(self) -> Set[Pair]:
         """Losslessly recover E = (Ê ∪ C+) \\ C-  (Sect. 2.1)."""
         node2sid = {}

@@ -82,6 +82,16 @@ split adds no new exposure: the stage boundary passes ``P(axis)``-sharded
 bucket arrays between two ``shard_map`` regions without host contact, and
 every drain round's scatter/exchange/append runs on per-device locals
 inside the ``lax.while_loop`` body.
+
+**Policy threading (PR 8).**  The router is policy-agnostic: routing
+keys on label hashes only, and the proposal/objective/commit triple
+reaches the engine rounds as static fields on the ``EngineConfig`` the
+step factories close over.  ``_STEP_CACHE`` keys on the whole (hashable)
+config, so two summarizers with different policy triples — or the same
+triple under different ``commit_margin``/``weight_levels`` — never share
+a compiled step.  No routing or intern code inspects the triple; the CI
+router-stress matrix re-runs this module's suites under a non-default
+triple (``REPRO_PROPOSAL``/``REPRO_OBJECTIVE``) to keep it that way.
 """
 from __future__ import annotations
 

@@ -22,7 +22,8 @@ import time
 
 from repro.core.engine import (BatchedSummarizer, EngineConfig,
                                ShardedSummarizer)
-from repro.core.reference import ALGORITHMS
+from repro.core.engine.state import OBJECTIVES, PROPOSALS
+from repro.core.reference import ALGORITHMS, WeightedDynamicSummary
 from repro.dist.router import DEFAULT_REPLICA_EXEC, REPLICA_EXEC_MODES
 from repro.graph.streams import (barabasi_albert_edges, copying_model_edges,
                                  edges_to_fully_dynamic_stream,
@@ -87,6 +88,18 @@ def main() -> None:
     ap.add_argument("--c", type=int, default=dflt.c)
     ap.add_argument("--escape", type=float, default=dflt.escape)
     ap.add_argument("--batch", type=int, default=dflt.batch)
+    # policy triple: defaults from EngineConfig (which resolves the
+    # REPRO_PROPOSAL/REPRO_OBJECTIVE env vars), same no-drift contract
+    ap.add_argument("--proposal", choices=list(PROPOSALS),
+                    default=dflt.proposal,
+                    help="candidate scheme (batched/sharded engines; the "
+                         "reference analog is --algo mosso vs --algo mags)")
+    ap.add_argument("--objective", choices=list(OBJECTIVES),
+                    default=dflt.objective,
+                    help="move-scoring objective (all engines)")
+    ap.add_argument("--weight-levels", type=int, default=dflt.weight_levels,
+                    help="weighted objective: node weights 1 + hash % N "
+                         "(0/1 = uniform)")
     args = ap.parse_args()
 
     stream = make_stream(args.graph, args.nodes, args.deg, args.beta,
@@ -95,6 +108,10 @@ def main() -> None:
     t0 = time.time()
     if args.engine == "reference":
         algo = ALGORITHMS[args.algo](seed=args.seed)
+        if args.objective == "weighted":
+            # the driver hooks are summary-agnostic: swap in the weighted
+            # host state machine before any change is processed
+            algo.s = WeightedDynamicSummary(weight_levels=args.weight_levels)
         if hasattr(algo, "c"):
             algo.c = args.c
         if hasattr(algo, "escape"):
@@ -107,7 +124,8 @@ def main() -> None:
         m_cap = 1 << max(10, (len(stream) * 2).bit_length())
         bs = BatchedSummarizer(EngineConfig(
             n_cap=n_cap, m_cap=m_cap, c=args.c, escape=args.escape,
-            batch=args.batch))
+            batch=args.batch, proposal=args.proposal,
+            objective=args.objective, weight_levels=args.weight_levels))
         bs.run(stream)
         phi, m = bs.phi, bs.num_edges
         extra = str(bs.stats())
@@ -118,7 +136,9 @@ def main() -> None:
         m_cap = 1 << max(10, (len(stream) * 2).bit_length())
         ss = ShardedSummarizer(
             EngineConfig(n_cap=n_cap, m_cap=m_cap, c=args.c,
-                         escape=args.escape, batch=args.batch),
+                         escape=args.escape, batch=args.batch,
+                         proposal=args.proposal, objective=args.objective,
+                         weight_levels=args.weight_levels),
             n_shards=args.shards, routing=args.routing,
             router_chunk=args.router_chunk, lane_cap=args.lane_cap,
             max_drain_rounds=args.max_drain_rounds,

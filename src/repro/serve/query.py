@@ -52,6 +52,18 @@ observing a torn intermediate.  ``view.epoch`` records which flush epoch
 the answers correspond to.  On buffer-donating backends (non-CPU) the
 NEXT engine dispatch invalidates a held snapshot; pass ``copy=True`` or
 consume the view before resuming writes (docs/KNOWN_ISSUES.md).
+
+**Policy independence (PR 8).**  The read path takes no
+``proposal``/``objective``/``commit`` branches, because per pair the
+composed answer algebraically reduces to the LISTED edge set whichever
+mode rule classifies the pair (superedge mode: candidates minus the
+derived C- holes == candidates ∩ listed; C+ mode: the listed edges
+verbatim) — and every policy maintains ``adj``/``epos`` as the exact
+live edge set.  The weighted objective's different mode threshold
+(``2W > TW + 1`` over weighted masses instead of ``2e > t + 1`` over
+counts) therefore cannot change an answer.  This module needs no
+per-policy code; the contract is pinned by
+``tests/test_differential.py::test_query_vs_decode_under_nondefault_policies``.
 """
 from __future__ import annotations
 

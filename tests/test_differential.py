@@ -176,6 +176,157 @@ def test_trial_engine_compiles_cond_free(trial_backend):
             assert n_pallas == 0, f"unexpected pallas_call ({tag})"
 
 
+def test_policy_matrix_compiles_cond_free():
+    """Acceptance tripwire (PR 8): EVERY proposal x objective x commit
+    triple lowers with zero ``cond`` primitives at any nesting depth, under
+    both ``dense`` lowerings — policy dispatch is trace-time Python, so no
+    variant may smuggle data-dependent control flow into the step."""
+    import itertools
+
+    import numpy as np
+
+    import jax
+    from repro.core.engine.state import (COMMIT_RULES, OBJECTIVES, PROPOSALS,
+                                         new_state)
+    from repro.core.engine.trial import step_fn
+
+    u = np.zeros(4, np.int32)
+    for prop, obj, com in itertools.product(PROPOSALS, OBJECTIVES,
+                                            COMMIT_RULES):
+        cfg = _cfg(n_cap=64, m_cap=256, d_cap=8, sn_cap=8, c=3, batch=4,
+                   proposal=prop, objective=obj, commit=com,
+                   commit_margin=1, weight_levels=3)
+        for dense in (False, True):
+            closed = jax.make_jaxpr(
+                lambda s, a, b, c: step_fn(s, a, b, c, cfg, dense))(
+                    new_state(cfg), u, u + 1, u > 0)
+            tag = f"triple=({prop},{obj},{com}) dense={dense}"
+            assert _count_primitives(closed.jaxpr, "cond") == 0, \
+                f"cond found ({tag})"
+
+
+def test_magsdm_engine_matches_reference_batchwise():
+    """PR 8 variant bar, proposal="magsdm": the engine's modal-supernode
+    candidate scheme runs against its own host reference (MoSSoMags, WITH
+    trials) on an identical FD stream; after every batch both tiers satisfy
+    the phi invariant and decode losslessly to the exact live edge set."""
+    from repro.core.reference import MoSSoMags
+
+    edges = sbm_edges(40, 4, 0.55, 0.04, seed=31)
+    stream = edges_to_fully_dynamic_stream(edges, delete_prob=0.15, seed=32)
+    cfg = _cfg(proposal="magsdm")
+    bs = BatchedSummarizer(cfg)
+    algo = MoSSoMags(seed=0, c=24)
+    live = set()
+
+    for off in range(0, len(stream), cfg.batch):
+        chunk = stream[off:off + cfg.batch]
+        bs.process(chunk)
+        for (u, v, ins) in chunk:
+            algo.process(u, v, ins)
+            e = (min(u, v), max(u, v))
+            (live.add if ins else live.discard)(e)
+        tag = f"off={off}"
+        ref_mat = algo.s.materialize()
+        assert algo.s.phi == ref_mat.phi == algo.s.phi_recomputed(), tag
+        eng_mat = bs.materialize()      # also asserts eab vs live edges
+        assert bs.phi == eng_mat.phi == bs.phi_recomputed(), tag
+        assert ref_mat.decode_edges() == live, tag
+        eng_live = {pair_key(bs._ids[u], bs._ids[v]) for (u, v) in live}
+        assert eng_mat.decode_edges() == eng_live, tag
+
+    assert live == ground_truth_edges(stream)
+    assert bs.phi <= len(live) and algo.s.phi <= len(live)
+    assert int(bs.state.n_accept) > 0      # the variant actually moved nodes
+
+
+def test_weighted_engine_matches_reference_batchwise():
+    """PR 8 variant bar, objective="weighted": the engine (hashed weights
+    over DENSE interned ids) runs against its own host reference — a
+    WeightedDynamicSummary weighing caller labels through the intern map,
+    so both tiers price the same node identically.  After every batch both
+    satisfy the weighted phi invariant (live phi == materialized
+    ``phi_weighted`` == refolded pair table) and decode losslessly: weights
+    move encoding choices, never the edge set."""
+    from repro.core.reference import WeightedDynamicSummary, host_node_weight
+
+    levels = 3
+    edges = sbm_edges(40, 4, 0.55, 0.04, seed=33)
+    stream = edges_to_fully_dynamic_stream(edges, delete_prob=0.15, seed=34)
+    # the engine interns labels in first-appearance order; replaying the
+    # stream reproduces the dense-id map before the engine exists
+    interned = {}
+    for (u, v, _) in stream:
+        for x in (u, v):
+            interned.setdefault(x, len(interned))
+    w_label = lambda lab: host_node_weight(interned[lab], levels)
+    w_dense = lambda d: host_node_weight(d, levels)
+
+    cfg = _cfg(objective="weighted", weight_levels=levels)
+    bs = BatchedSummarizer(cfg)
+    ref = WeightedDynamicSummary(weight_levels=levels, node_weight=w_label)
+    live = set()
+
+    for off in range(0, len(stream), cfg.batch):
+        chunk = stream[off:off + cfg.batch]
+        bs.process(chunk)
+        for (u, v, ins) in chunk:
+            e = (min(u, v), max(u, v))
+            if ins:
+                ref.insert(*e)
+                live.add(e)
+            else:
+                ref.delete(*e)
+                live.discard(e)
+        tag = f"off={off}"
+        ref_mat = ref.materialize()
+        assert ref.phi == ref_mat.phi_weighted(ref._w) \
+            == ref.phi_recomputed(), tag
+        eng_mat = bs.materialize()  # asserts eab vs live edges + weab drift
+        assert bs.phi == eng_mat.phi_weighted(w_dense) \
+            == bs.phi_recomputed(), tag
+        assert ref_mat.decode_edges() == live, tag
+        eng_live = {pair_key(bs._ids[u], bs._ids[v]) for (u, v) in live}
+        assert eng_mat.decode_edges() == eng_live, tag
+
+    assert live == ground_truth_edges(stream)
+    # the precomputed intern replay really is the engine's dense-id map —
+    # the premise that made w_label and w_dense price nodes identically
+    assert interned == bs._ids
+
+
+def test_query_vs_decode_under_nondefault_policies():
+    """The query path is policy-INDEPENDENT by construction: answers always
+    equal the listed edge set, whatever produced it.  Pin that under the
+    fully non-default triple — after every batch, neighbors/degree/has_edge
+    from the compressed state equal the decode oracle."""
+    import itertools
+
+    cfg = _cfg(n_cap=128, m_cap=1024, batch=16, c=6, proposal="magsdm",
+               objective="weighted", weight_levels=3, commit="threshold",
+               commit_margin=0)
+    edges = sbm_edges(36, 4, 0.55, 0.05, seed=35)
+    stream = edges_to_fully_dynamic_stream(edges, delete_prob=0.2, seed=36)
+    bs = BatchedSummarizer(cfg)
+
+    for off in range(0, len(stream), cfg.batch):
+        bs.process(stream[off:off + cfg.batch])
+        tag = f"off={off}"
+        q = bs.query()
+        dec = {pair_key(bs._rev[a], bs._rev[b])
+               for (a, b) in bs.materialize().decode_edges()}
+        adj = _adj_from_edges(dec)
+        labs = q.seen_labels()
+        for lab, nb, dg in zip(labs, q.neighbors_batch(labs),
+                               q.degree_batch(labs)):
+            want = adj.get(lab, set())
+            assert nb == want, f"neighbors({lab}) {tag}"
+            assert dg == len(want), f"degree({lab}) {tag}"
+        pairs = list(itertools.combinations(labs[:12], 2))
+        for (u, v), got in zip(pairs, q.has_edge_batch(pairs)):
+            assert got == (pair_key(u, v) in dec), f"has_edge({u},{v}) {tag}"
+
+
 def test_pallas_step_bitwise_equals_xla_step():
     """The probe-kernel backend is not 'close': on an identical stream the
     pallas- and xla-backed engines must end in leaf-bitwise IDENTICAL

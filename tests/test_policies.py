@@ -1,0 +1,262 @@
+"""Policy-layer tests (PR 8): the pluggable proposal/objective/commit triple.
+
+Host property tests pin the refactor's two load-bearing reductions:
+
+* uniform weights (``weight_levels <= 1``) make the weighted objective
+  reproduce the exact delta-phi BIT-FOR-BIT, on the host reference and on
+  the engine (common state leaves bitwise identical), and
+* under BOTH objectives the live ``phi`` agrees with the independently
+  refolded ``phi_recomputed()`` and with the materialized
+  :class:`SummaryOutput` (``phi`` exact / ``phi_weighted`` weighted) after
+  every change.
+
+Plus registry/config pins so the policy names in ``engine/state.py``, the
+implementations in ``engine/policies.py``, and the CLI choices cannot
+drift apart.
+"""
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # container has no hypothesis; deterministic shim
+    from repro.testing.proptest import given, settings, strategies as st
+
+from repro.core.engine import BatchedSummarizer, EngineConfig
+from repro.core.engine import policies
+from repro.core.engine import state as engine_state
+from repro.core.reference import (ALGORITHMS, DynamicSummary, MoSSoMags,
+                                  WeightedDynamicSummary, host_node_weight)
+from repro.graph.streams import edges_to_fully_dynamic_stream, sbm_edges
+
+from conftest import ground_truth_edges
+
+
+def _cfg(**kw):
+    base = dict(n_cap=256, m_cap=2048, d_cap=48, sn_cap=32, c=8, batch=16,
+                escape=0.3)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+# --------------------------------------------------------------- registries
+def test_policy_registries_match_state_tuples():
+    """The name tuples in state.py (the config/CLI vocabulary) and the
+    implementation dicts in policies.py are the same sets, in the same
+    order — a rename in one place must fail here, not at dispatch time."""
+    assert tuple(policies.PROPOSALS) == engine_state.PROPOSALS
+    assert tuple(policies.OBJECTIVES) == engine_state.OBJECTIVES
+    assert tuple(policies.COMMIT_RULES) == engine_state.COMMIT_RULES
+    for d in (policies.PROPOSALS, policies.OBJECTIVES, policies.COMMIT_RULES):
+        assert all(callable(f) for f in d.values())
+
+
+def test_engine_config_rejects_unknown_policies():
+    with pytest.raises(ValueError):
+        _cfg(proposal="random-walk")
+    with pytest.raises(ValueError):
+        _cfg(objective="l2")
+    with pytest.raises(ValueError):
+        _cfg(commit="always")
+
+
+def test_engine_config_policy_triple_is_hashable_cache_key():
+    """Compile caches key on the config, so distinct triples must hash as
+    distinct configs and equal triples as equal configs."""
+    a = _cfg(proposal="minhash", objective="exact")
+    b = _cfg(proposal="minhash", objective="exact")
+    c = _cfg(proposal="magsdm", objective="weighted", weight_levels=3)
+    assert a == b and hash(a) == hash(b)
+    assert a != c
+    assert len({a, b, c}) == 2
+
+
+def test_weab_cap_is_dummy_under_exact_objective():
+    assert _cfg(objective="exact").table_caps()["weab"] == 8
+    w = _cfg(objective="weighted")
+    assert w.table_caps()["weab"] == w.table_caps()["eab"]
+
+
+def test_mags_reference_registered():
+    assert ALGORITHMS["mags"] is MoSSoMags
+
+
+# ---------------------------------------------------- host reference: uniform
+def _random_moves(s, rng, k=4):
+    """Attempt k random moves via delta_phi/move; return the picks made so a
+    twin summary can replay the identical sequence."""
+    picks = []
+    nodes = sorted(s.n2s)
+    sids = sorted(s.members)
+    for _ in range(k):
+        if not nodes or not sids:
+            break
+        y = rng.choice(nodes)
+        t = rng.choice(sids)
+        picks.append((y, t))
+    return picks
+
+
+def _apply_picks(s, picks):
+    """Replay (y, target) picks: compute delta_phi, move iff it saves, and
+    hand back the deltas for bit-for-bit comparison."""
+    out = []
+    for (y, t) in picks:
+        if t == s.n2s[y] or t not in s.members:
+            out.append(None)
+            continue
+        d = s.delta_phi(y, t)
+        out.append(d)
+        if d <= 0:
+            before = s.phi
+            s.move(y, t)
+            assert s.phi == before + d, "delta_phi disagrees with move()"
+    return out
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 9999))
+def test_uniform_weights_reproduce_exact_delta_phi_bitwise(seed):
+    """Property: with weight_levels=1 every weighted hook collapses to the
+    base class, so WeightedDynamicSummary tracks DynamicSummary bit-for-bit
+    — phi after every change, every delta_phi, every post-move state."""
+    rng1, rng2 = random.Random(seed), random.Random(seed)
+    edges = sbm_edges(24, 3, 0.5, 0.06, seed=seed)
+    stream = edges_to_fully_dynamic_stream(edges, delete_prob=0.2,
+                                           seed=seed + 1)
+    ref = DynamicSummary()
+    wref = WeightedDynamicSummary(weight_levels=1)
+    for i, (u, v, ins) in enumerate(stream):
+        (ref.insert if ins else ref.delete)(u, v)
+        (wref.insert if ins else wref.delete)(u, v)
+        assert wref.phi == ref.phi, f"t={i}"
+        if i % 7 == 0:
+            picks = _random_moves(ref, rng1)
+            assert picks == _random_moves(wref, rng2)
+            assert _apply_picks(ref, picks) == _apply_picks(wref, picks), \
+                f"delta_phi diverged at t={i}"
+            assert wref.n2s == ref.n2s and wref.P == ref.P, f"t={i}"
+            assert wref.cplus == ref.cplus and wref.cminus == ref.cminus
+    assert wref.phi == ref.phi == ref.phi_recomputed() == \
+        wref.phi_recomputed()
+    assert wref.materialize().decode_edges() == \
+        ref.materialize().decode_edges() == ground_truth_edges(stream)
+
+
+# --------------------------------------------------- host reference: weighted
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 9999), st.integers(2, 5))
+def test_weighted_reference_invariants_and_lossless_decode(seed, levels):
+    """Property: under hashed node weights the live phi equals the
+    materialized ``phi_weighted`` and the refolded ``phi_recomputed`` after
+    every change, delta_phi predicts move() exactly, and decode stays
+    lossless — weights shift encoding choices, never the edge set."""
+    rng = random.Random(seed)
+    edges = sbm_edges(24, 3, 0.5, 0.06, seed=seed)
+    stream = edges_to_fully_dynamic_stream(edges, delete_prob=0.2,
+                                           seed=seed + 1)
+    s = WeightedDynamicSummary(weight_levels=levels)
+    live = set()
+    for i, (u, v, ins) in enumerate(stream):
+        if ins:
+            s.insert(u, v)
+            live.add((min(u, v), max(u, v)))
+        else:
+            s.delete(u, v)
+            live.discard((min(u, v), max(u, v)))
+        if i % 7 == 0:
+            _apply_picks(s, _random_moves(s, rng))  # asserts phi == phi + d
+        mat = s.materialize()
+        assert s.phi == mat.phi_weighted(s._w) == s.phi_recomputed(), f"t={i}"
+        assert mat.decode_edges() == live, f"t={i}"
+    assert live == ground_truth_edges(stream)
+    # the exact phi of the same representation is a DIFFERENT number once
+    # any pair weight exceeds 1 — guard against the weighted hooks silently
+    # degenerating to counts
+    if any(w > 1 for w in map(s._w, s.n2s)) and (s.cplus or s.cminus):
+        assert mat.phi != s.phi or all(
+            s._w(u) * s._w(v) == 1
+            for c in (mat.c_plus, mat.c_minus) for (u, v) in c)
+
+
+def test_mags_reference_end_to_end_lossless():
+    """MoSSoMags (the magsdm host reference) summarizes an FD stream
+    losslessly and satisfies the phi invariant."""
+    edges = sbm_edges(32, 4, 0.55, 0.05, seed=9)
+    stream = edges_to_fully_dynamic_stream(edges, delete_prob=0.2, seed=10)
+    algo = MoSSoMags(seed=0, c=24)
+    algo.run(stream)
+    s = algo.s
+    mat = s.materialize()
+    assert s.phi == mat.phi == s.phi_recomputed()
+    assert mat.decode_edges() == ground_truth_edges(stream)
+    assert algo.stats.accepted > 0     # the modal-candidate scheme found moves
+
+
+# ----------------------------------------------------------------- engine
+def _run_stream(cfg, stream, **kw):
+    return BatchedSummarizer(cfg, **kw).run(stream)
+
+
+def test_engine_uniform_weighted_bitwise_equals_exact():
+    """weight_levels=0 is the uniform reduction ON DEVICE too: every state
+    leaf shared between the exact and weighted engines is bitwise identical
+    after the same stream (weab/wsum/wsq are the weighted view's own)."""
+    import jax
+    import numpy as np
+
+    edges = sbm_edges(30, 3, 0.5, 0.06, seed=17)
+    stream = edges_to_fully_dynamic_stream(edges, delete_prob=0.2, seed=18)
+    be = _run_stream(_cfg(objective="exact"), stream)
+    bw = _run_stream(_cfg(objective="weighted", weight_levels=0), stream)
+    assert be.phi == bw.phi
+    skip = {"wsum", "wsq", "weab"}
+    for name in type(be.state)._fields:
+        if name in skip:
+            continue
+        le, lw = getattr(be.state, name), getattr(bw.state, name)
+        for a, b in zip(jax.tree.leaves(le), jax.tree.leaves(lw)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"leaf {name}")
+
+
+def test_engine_threshold_margin_zero_equals_saving():
+    """commit="threshold" with margin 0 is definitionally Move-if-Saved:
+    the two commit rules must produce bitwise-identical runs."""
+    import jax
+    import numpy as np
+
+    edges = sbm_edges(30, 3, 0.5, 0.06, seed=19)
+    stream = edges_to_fully_dynamic_stream(edges, delete_prob=0.2, seed=20)
+    bs = _run_stream(_cfg(commit="saving"), stream)
+    bt = _run_stream(_cfg(commit="threshold", commit_margin=0), stream)
+    assert bs.phi == bt.phi
+    for a, b in zip(jax.tree.leaves(bs.state), jax.tree.leaves(bt.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("objective,levels", [("exact", 0), ("weighted", 3)])
+def test_engine_ratio_and_phi_recomputed_vs_materialized(objective, levels):
+    """compression_ratio and phi_recomputed agree with the materialized
+    SummaryOutput under both objectives: phi == mat.phi (exact) ==
+    mat.phi_weighted(w) (weighted; w hashes DENSE interned ids, the
+    engine's weight domain) == the refolded pair table."""
+    edges = sbm_edges(36, 4, 0.55, 0.05, seed=23)
+    stream = edges_to_fully_dynamic_stream(edges, delete_prob=0.2, seed=24)
+    cfg = _cfg(objective=objective, weight_levels=levels)
+    bs = _run_stream(cfg, stream)
+    mat = bs.materialize()     # asserts eab vs live edges (+ weab drift)
+    if objective == "exact":
+        assert bs.phi == mat.phi
+    else:
+        assert bs.phi == mat.phi_weighted(
+            lambda d: host_node_weight(d, levels))
+        if levels > 1:
+            assert bs.phi != mat.phi or not (mat.c_plus or mat.c_minus)
+    assert bs.phi == bs.phi_recomputed()
+    assert bs.compression_ratio() == bs.phi / max(bs.num_edges, 1)
+    # decode is lossless regardless of objective
+    truth = ground_truth_edges(stream)
+    assert {(min(bs._rev[a], bs._rev[b]), max(bs._rev[a], bs._rev[b]))
+            for (a, b) in mat.decode_edges()} == truth
