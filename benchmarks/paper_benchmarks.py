@@ -429,18 +429,83 @@ def policy_summary(n_nodes: int = 400, deg: int = 4) -> List[Row]:
     return rows
 
 
+def ckpt_microbench(n_nodes: int = 300, deg: int = 4, n_shards: int = 2,
+                    chunk: int = 256, iters: int = 5) -> List[Row]:
+    """Beyond-paper (PR 9): price of the crash-consistency layer.
+
+    A sharded summarizer ingests an FD stream with write-ahead journaling
+    on, then the two recovery primitives are timed in isolation:
+
+    * ``ckpt/save`` — one epoch checkpoint of the full recovery closure
+      (flush + state/intern fetch + atomic fsynced write + retention +
+      journal compaction), us per call; what a ``--checkpoint-every``
+      epoch costs the stream.
+    * ``ckpt/restore`` — restore into a FRESH summarizer (checksum verify
+      + array load + host closure unpickle), us per call; the floor of
+      the recovery path (journal replay rides on normal dispatch and is
+      priced by the router rows).
+
+    A bitwise restore check runs before the clock starts — the same bar
+    tests/test_recovery.py holds the layer to."""
+    import shutil
+    import tempfile
+
+    import jax
+    import numpy as np
+
+    rows: List[Row] = []
+    stream = _stream(n_nodes, deg, seed=13)
+    cfg = EngineConfig(n_cap=2048, m_cap=1 << 14, d_cap=64, sn_cap=48,
+                       c=16, batch=64, escape=0.2)
+    d = tempfile.mkdtemp(prefix="mosso_ckpt_bench_")
+    try:
+        ss = ShardedSummarizer(cfg, n_shards=n_shards, router_chunk=chunk,
+                               checkpoint_dir=d)
+        ss.run(stream)
+
+        # restored == saved, leaf-bitwise, before anything is timed
+        ss.save()
+        fresh = ShardedSummarizer(cfg, n_shards=n_shards,
+                                  router_chunk=chunk, checkpoint_dir=d)
+        fresh.restore()
+        for a, b in zip(jax.tree.leaves(ss._ckpt_tree()),
+                        jax.tree.leaves(fresh._ckpt_tree())):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        t0 = time.time()
+        for _ in range(iters):
+            ss.save()
+        us_save = 1e6 * (time.time() - t0) / iters
+        rows.append(("ckpt/save", us_save,
+                     f"n={n_nodes} shards={n_shards} phi={ss.phi} "
+                     f"fsync+checksum epoch checkpoint"))
+
+        t0 = time.time()
+        for _ in range(iters):
+            fresh.restore()
+        us_rst = 1e6 * (time.time() - t0) / iters
+        rows.append(("ckpt/restore", us_rst,
+                     f"n={n_nodes} shards={n_shards} verify+load, "
+                     f"save_over_restore={us_save/max(us_rst,1e-9):.1f}x"))
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    return rows
+
+
 def smoke() -> List[Row]:
     """Tiny-config subset for CI: exercises both routing modes end to end
     (including the lockstep phi assertion), the probe microbenchmark, the
-    online query path, and the per-policy summary rows in well under a
-    minute."""
+    online query path, the per-policy summary rows, and the checkpoint
+    save/restore primitives in well under a minute."""
     return (router_throughput(n_nodes=120, deg=3, n_shards=2, chunk=128)
             + probe_microbench(cap=1024, batch=128, iters=50)
             + query_microbench(n_nodes=120, deg=3, n_shards=2, chunk=128,
                                batch_q=64, iters=5)
-            + policy_summary(n_nodes=120, deg=3))
+            + policy_summary(n_nodes=120, deg=3)
+            + ckpt_microbench(n_nodes=120, deg=3, n_shards=2, chunk=128,
+                              iters=3))
 
 
 ALL = [fig4_speed, fig5_compression, fig1c_scalability, fig6_parameters,
        fig7a_graph_properties, engine_throughput, router_throughput,
-       probe_microbench, query_microbench, policy_summary]
+       probe_microbench, query_microbench, policy_summary, ckpt_microbench]

@@ -1,15 +1,18 @@
 """End-to-end driver: sharded, device-routed summarization of a large
-stream with fault-tolerant checkpointing (the paper's workload, production
-shape).
+stream with crash-consistent checkpointing (the paper's workload,
+production shape).
 
 Feeds a fully dynamic stream through ``ShardedSummarizer`` on the default
 ``routing="device"`` path — the two-stage pipelined router that hashes
 labels on the host (no per-change dict work), routes and interns on
 device, and overlaps chunk k+1's routing with chunk k's engine rounds —
 then reports the any-time compression ratio, certifies the sync-free
-dispatch telemetry, checkpoints the device state mid-stream, simulates a
-crash, restores, and verifies the restored run ends at the identical
-state.
+dispatch telemetry, and exercises the crash-consistency layer end to end:
+the run is killed mid-stream at a chunk boundary, a FRESH summarizer
+recovers from the checkpoint directory (last epoch checkpoint + journal
+tail replay, ``recover()``), its query answers are asserted identical to
+the pre-kill view, and after continuing it must land leaf-bitwise on the
+uninterrupted run's state.
 
 This example is CI-smoked (`.github/workflows/ci.yml`), so it cannot
 drift from the real API.
@@ -18,16 +21,20 @@ Run:  PYTHONPATH=src python examples/summarize_stream.py [n_nodes] \
           [--proposal {minhash,magsdm}] [--objective {exact,weighted}]
 """
 import argparse
+import shutil
 import sys
 import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-from repro.checkpoint import checkpointer
+import jax
+import numpy as np
+
 from repro.core.engine import EngineConfig, ShardedSummarizer
 from repro.core.engine.state import OBJECTIVES, PROPOSALS
 from repro.dist.router import DEFAULT_REPLICA_EXEC
+from repro.ft.inject import SimulatedCrash, drive
 from repro.graph.streams import (barabasi_albert_edges,
                                  edges_to_fully_dynamic_stream)
 
@@ -56,7 +63,17 @@ cfg = EngineConfig(n_cap=1 << max(8, (2 * n_nodes).bit_length()),
                    weight_levels=args.weight_levels)
 print(f"policy: proposal={cfg.proposal} objective={cfg.objective} "
       f"commit={cfg.commit}")
-ss = ShardedSummarizer(cfg, n_shards=2, router_chunk=512)
+
+ckpt_dir = "/tmp/mosso_stream_ckpt"
+shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+
+def make_engine(checkpoint_dir=None):
+    return ShardedSummarizer(cfg, n_shards=2, router_chunk=512,
+                             checkpoint_dir=checkpoint_dir)
+
+
+ss = make_engine(ckpt_dir)
 assert ss.routing == "device" and ss.sync_free and ss.pipeline
 # the constructor resolves replica_exec=None to the backend-aware default
 assert ss.replica_exec == DEFAULT_REPLICA_EXEC
@@ -64,50 +81,69 @@ print(f"router: chunk={ss.router_chunk} lane_cap={ss.lane_cap} "
       f"sync_free={ss.sync_free} pipeline={ss.pipeline} "
       f"replica_exec={ss.replica_exec}")
 
-ckpt_dir = "/tmp/mosso_stream_ckpt"
-half = (len(stream) // 2 // ss.router_chunk) * ss.router_chunk
+# --- crash mid-stream: every chunk is write-ahead journaled before its
+# dispatch, an epoch checkpoint lands every 2 chunks, and the kill fires
+# at a chunk boundary that is NOT a checkpoint (the journal tail earns it)
+n_chunks = -(-len(stream) // ss.router_chunk)
+kill_at = max(n_chunks // 2, 1) | 1          # odd => between checkpoints
 t0 = time.time()
-ss.process(stream[:half])
-t_half = time.time() - t0
-print(f"[t={half}] ratio={ss.compression_ratio():.3f} phi={ss.phi} "
-      f"({1e6*t_half/half:.0f} us/change incl. compile)")
+try:
+    drive(ss, stream, ckpt_every=2, kill_at_chunk=kill_at)
+    raise SystemExit("kill point never reached — stream too short?")
+except SimulatedCrash as e:
+    half = ss.stream_cursor
+    t_half = time.time() - t0
+    print(f"[t={half}] ratio={ss.compression_ratio():.3f} phi={ss.phi} "
+          f"({1e6*t_half/max(half,1):.0f} us/change incl. compile)")
+    print(f"crash injected: {e}")
 
-# steady-state dispatch stayed sync-free and dict-free
+# steady-state dispatch stayed sync-free and dict-free up to the kill
 st = ss.stats()
 assert st["router_syncs"] == 0 and st["router_host_dict_ops"] == 0, st
 print(f"dispatch telemetry: syncs={st['router_syncs']} "
       f"host_dict_ops={st['router_host_dict_ops']} "
       f"drain_rounds={st['router_drain_rounds']}")
+ss.flush()                                   # pin the view at the kill point
+q_pre = ss.query()
+probe = sorted({u for (u, v, _ins) in stream[:half]})[:64]
+answers_pre = {u: (q_pre.degree(u), sorted(q_pre.neighbors(u)))
+               for u in probe}
 
-# --- fault tolerance: checkpoint, 'crash', restore, continue -------------
-ss.flush()                                   # drain the dispatch pipeline
-checkpointer.save(ckpt_dir, half,
-                  {"est": ss.state._asdict(), "ist": ss.intern._asdict()},
-                  extra={"stream_cursor": half,
-                         "h2label": {str(h): l
-                                     for h, l in ss.host_label_map().items()}})
-print(f"checkpointed sharded engine state at change {half}")
+# --- recovery: the crashed object is ABANDONED (as a real restart would);
+# a fresh engine restores the last epoch and replays the journal tail
+ss2 = make_engine(ckpt_dir)
+info = ss2.recover()
+print(f"recovered: epoch={info['epoch']} "
+      f"replayed_chunks={info['replayed_chunks']} cursor={info['cursor']}")
+assert ss2.stream_cursor == half, (ss2.stream_cursor, half)
 
-ss2 = ShardedSummarizer(cfg, n_shards=2, router_chunk=512)  # fresh process
-restored = checkpointer.restore(
-    ckpt_dir, half, {"est": ss2.state._asdict(), "ist": ss2.intern._asdict()})
-ss2.state = type(ss2.state)(**restored["est"])
-ss2.intern = type(ss2.intern)(**restored["ist"])
-meta = checkpointer.load_meta(ckpt_dir, half)
-ss2._h2label = {int(h): l for h, l in meta["extra"]["h2label"].items()}
-cursor = meta["extra"]["stream_cursor"]
+# post-recovery query answers are identical to the pre-kill view (both
+# views pinned at the same flush epoch — the kill-point chunk boundary)
+ss2.flush()
+q_post = ss2.query()
+answers_post = {u: (q_post.degree(u), sorted(q_post.neighbors(u)))
+                for u in probe}
+assert answers_post == answers_pre, "recovered query answers diverged!"
+print(f"query answers identical across recovery ({len(probe)} labels) ✓")
 
+# --- continue both runs to the end: the recovered run must land bitwise
+# on the uninterrupted run's state (the standing recovery bar)
+ref = make_engine()                          # uninterrupted reference
 t0 = time.time()
-ss.process(stream[half:])
-ss2.process(stream[cursor:])
-phi1, phi2 = ss.phi, ss2.phi      # sync both runs before stopping the clock
+ref.process(stream)
+ss2.process(stream[ss2.stream_cursor:])
+ref.flush(), ss2.flush()
 t_rest = time.time() - t0
-assert phi1 == phi2, "restored run diverged!"
-print(f"crash-restore verified: both runs end at phi={phi1} ✓")
+for a, b in zip(jax.tree.leaves(ref.state), jax.tree.leaves(ss2.state)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+for a, b in zip(jax.tree.leaves(ref.intern), jax.tree.leaves(ss2.intern)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+assert ref.phi == ss2.phi
+print(f"crash-recover verified: bitwise state match, phi={ref.phi} ✓")
 
-print(f"[t={len(stream)}] ratio={ss.compression_ratio():.3f} "
-      f"phi={ss.phi} |E|={ss.num_edges}")
-print(f"stats: {ss.stats()}")
+print(f"[t={len(stream)}] ratio={ss2.compression_ratio():.3f} "
+      f"phi={ss2.phi} |E|={ss2.num_edges}")
+print(f"stats: {ss2.stats()}")
 print(f"steady-state throughput: "
-      f"{(len(stream)-half)/t_rest*2:.0f} changes/s on CPU "
+      f"{(2 * len(stream) - half)/t_rest:.0f} changes/s on CPU "
       f"(both runs; TPU is the deployment target)")

@@ -165,11 +165,109 @@ def _relabel_output(out: SummaryOutput, rev: Sequence[object],
 
 
 # --------------------------------------------------------------------------- #
+# crash consistency (shared by both front-ends)
+# --------------------------------------------------------------------------- #
+
+
+class _CrashConsistency:
+    """Epoch checkpoints + write-ahead chunk journal for a summarizer.
+
+    Both front-ends dispatch the stream in fixed-size chunks
+    (``dispatch_chunk``), and chunk boundaries fully determine padding
+    and the engine-round/PRNG schedule — so a run is reconstructible
+    bitwise from (checkpoint at epoch E) + (the exact chunk slices
+    dispatched after E).  This mixin supplies that contract:
+
+    * with ``checkpoint_dir`` set, every chunk is durably journaled
+      (:class:`repro.checkpoint.journal.ChunkJournal`) **before** it is
+      dispatched;
+    * ``save()`` writes the full recovery closure at a flushed epoch and
+      compacts the journal; ``restore()`` loads the newest checkpoint
+      that passes its checksums (refusing config mismatches);
+    * ``recover()`` = restore + deterministic journal-tail replay, the
+      crash path proven bitwise by ``tests/test_recovery.py``.
+
+    ``stream_cursor`` counts stream changes applied so far — a driver
+    resumes feeding from there after ``recover()``.  ``_incarnation``
+    bumps on every restore so pinned query views fail loudly instead of
+    resolving labels against a state they were not snapshotted from.
+    """
+
+    def _init_crash_consistency(self, checkpoint_dir: Optional[str]) -> None:
+        self._ckpt_dir = checkpoint_dir
+        self._journal = None        # lazily opened ChunkJournal
+        self._journal_seq = 0       # chunks dispatched (journal record seq)
+        self._cursor = 0            # stream changes applied
+        self._replaying = False     # recovery replay: don't re-journal
+        self._recovered = False     # this instance resumed an old directory
+        self.stream_retries = 0     # recoveries performed by a retry driver
+        self._incarnation = 0       # bumps per restore; query views pin it
+
+    @property
+    def stream_cursor(self) -> int:
+        """Stream changes applied (journaled-and-dispatched) so far."""
+        return self._cursor
+
+    def _journal_chunk(self, chunk) -> None:
+        """WAL append for one dispatch chunk; seq advances regardless of
+        whether journaling is enabled so save/restore counters line up."""
+        seq = self._journal_seq
+        self._journal_seq += 1
+        if self._ckpt_dir is None or self._replaying:
+            return
+        if self._journal is None:
+            from repro.checkpoint.journal import ChunkJournal
+            from repro.checkpoint.summary import journal_path
+            self._journal = ChunkJournal(journal_path(self._ckpt_dir))
+            if seq == 0 and not self._recovered:
+                self._journal.reset()   # fresh stream into an old directory
+        self._journal.append(seq, chunk)
+
+    def _replay_chunk(self, changes) -> None:
+        """Re-dispatch one journaled chunk during recovery (no re-append).
+        Each journal record is one original dispatch slice (≤ the chunk
+        size), so replaying it as its own ``process`` call reproduces the
+        original padding and engine-round schedule exactly."""
+        self._replaying = True
+        try:
+            self.process(changes)
+        finally:
+            self._replaying = False
+
+    def _require_ckpt_dir(self, ckpt_dir: Optional[str]) -> str:
+        d = ckpt_dir or self._ckpt_dir
+        if d is None:
+            raise ValueError(
+                "no checkpoint directory: pass one explicitly or construct "
+                "the summarizer with checkpoint_dir=...")
+        return d
+
+    def save(self, ckpt_dir: Optional[str] = None) -> str:
+        """Checkpoint the full recovery closure at a flushed epoch."""
+        from repro.checkpoint import summary as ckpt
+        return ckpt.save_summarizer(self, self._require_ckpt_dir(ckpt_dir))
+
+    def restore(self, ckpt_dir: Optional[str] = None,
+                step: Optional[int] = None) -> dict:
+        """Load the newest verifiable checkpoint (or ``step``) into this
+        summarizer; raises on config mismatch, falls back across corrupt
+        epochs."""
+        from repro.checkpoint import summary as ckpt
+        return ckpt.restore_summarizer(self, self._require_ckpt_dir(ckpt_dir),
+                                       step=step)
+
+    def recover(self, ckpt_dir: Optional[str] = None) -> dict:
+        """Crash recovery: restore last valid epoch + replay journal tail."""
+        from repro.checkpoint import summary as ckpt
+        return ckpt.recover_summarizer(self, self._require_ckpt_dir(ckpt_dir))
+
+
+# --------------------------------------------------------------------------- #
 # single-engine front-end
 # --------------------------------------------------------------------------- #
 
 
-class BatchedSummarizer:
+class BatchedSummarizer(_CrashConsistency):
     """Feed a fully dynamic graph stream through the jitted engine step.
 
     **Id space.** ``process``/``run`` accept arbitrary hashable caller
@@ -194,7 +292,8 @@ class BatchedSummarizer:
     """
 
     def __init__(self, cfg: EngineConfig | None = None, *,
-                 trial_backend: str | None = None, **overrides) -> None:
+                 trial_backend: str | None = None,
+                 checkpoint_dir: Optional[str] = None, **overrides) -> None:
         from repro.core.engine.hashtable import resolve_trial_backend
         if cfg is None:
             cfg = EngineConfig(**overrides)
@@ -207,6 +306,7 @@ class BatchedSummarizer:
         self._ids: Dict[object, int] = {}
         self._rev: List[object] = []
         self._epoch = 0             # engine-step dispatches applied so far
+        self._init_crash_consistency(checkpoint_dir)
 
     # ------------------------------------------------------------------ ids
     def _nid(self, label: object) -> int:
@@ -219,21 +319,39 @@ class BatchedSummarizer:
         return i
 
     # --------------------------------------------------------------- stream
+    @property
+    def dispatch_chunk(self) -> int:
+        """Stream slice size per journaled dispatch (= ``cfg.batch``)."""
+        return self.cfg.batch
+
     def process(self, changes: Sequence[Change]) -> None:
         b = self.cfg.batch
-        buf = [(self._nid(u), self._nid(v), ins) for (u, v, ins) in changes]
-        for off in range(0, len(buf), b):
-            chunk = buf[off:off + b]
-            pad = b - len(chunk)
-            u = np.array([c[0] for c in chunk] + [-1] * pad, np.int32)
-            v = np.array([c[1] for c in chunk] + [-1] * pad, np.int32)
-            ins = np.array([c[2] for c in chunk] + [False] * pad, bool)
+        changes = list(changes)
+        # slice BEFORE interning: each batch slice is journaled (WAL) and
+        # then interned+dispatched on its own, so a journal-tail replay of
+        # the same slices reproduces _ids encounter order, padding and the
+        # engine-round/PRNG schedule exactly (interning is stream-ordered
+        # either way, so per-slice interning is bitwise identical to the
+        # old whole-call interning)
+        for off in range(0, len(changes), b):
+            sl = changes[off:off + b]
+            self._journal_chunk(sl)
+            buf = [(self._nid(u), self._nid(v), ins) for (u, v, ins) in sl]
+            pad = b - len(buf)
+            u = np.array([c[0] for c in buf] + [-1] * pad, np.int32)
+            v = np.array([c[1] for c in buf] + [-1] * pad, np.int32)
+            ins = np.array([c[2] for c in buf] + [False] * pad, bool)
             self.state = self._step(self.state, u, v, ins)
             self._epoch += 1
+            self._cursor += len(sl)
 
     def run(self, stream: Iterable[Change]) -> "BatchedSummarizer":
         self.process(list(stream))
         return self
+
+    def flush(self) -> None:
+        """No-op barrier (dispatch is synchronous here); API symmetry with
+        the sharded tier so checkpoint code can flush either."""
 
     # ---------------------------------------------------------------- reads
     @property
@@ -298,7 +416,35 @@ class BatchedSummarizer:
         s = self.state
         return dict(phi=int(s.phi), num_edges=int(s.num_edges),
                     trials=int(s.n_trials), accepted=int(s.n_accept),
-                    skipped=int(s.n_skipped))
+                    skipped=int(s.n_skipped),
+                    stream_retries=self.stream_retries)
+
+    # ----------------------------------------------------- recovery closure
+    def _ckpt_tree(self) -> dict:
+        return {"est": self.state._asdict()}
+
+    def _ckpt_host(self) -> dict:
+        return {"ids": dict(self._ids), "rev": list(self._rev)}
+
+    def _ckpt_manifest(self) -> dict:
+        return {"tier": "batched", "config": self.cfg.manifest(),
+                "trial_backend": self.trial_backend}
+
+    @staticmethod
+    def _ckpt_pins() -> tuple:
+        # trial_backend is a bitwise-identical execution variant (standing
+        # differential bar) — recorded, not pinned
+        return ("tier", "config")
+
+    def _ckpt_apply(self, tree: dict, host: dict, extra: dict) -> None:
+        self.state = EngineState(**tree["est"])
+        self._ids = dict(host["ids"])
+        self._rev = list(host["rev"])
+        self._epoch = int(extra["epoch"])
+        self._journal_seq = int(extra["journal_seq"])
+        self._cursor = int(extra["cursor"])
+        self._recovered = True
+        self._incarnation += 1
 
     # ------------------------------------------------------------ materialize
     def live_edges(self) -> Set[Tuple[int, int]]:
@@ -316,7 +462,7 @@ class BatchedSummarizer:
 # --------------------------------------------------------------------------- #
 
 
-class ShardedSummarizer:
+class ShardedSummarizer(_CrashConsistency):
     """Edge-partitioned summarization across mesh devices.
 
     Every stream change is routed to the shard owning its canonical pair
@@ -428,6 +574,7 @@ class ShardedSummarizer:
                  pipeline: bool = True,
                  replica_exec: Optional[str] = None,
                  trial_backend: Optional[str] = None,
+                 checkpoint_dir: Optional[str] = None,
                  **overrides) -> None:
         import math
 
@@ -485,7 +632,7 @@ class ShardedSummarizer:
         self.chunk_sync = bool(chunk_sync)
         # drain-round telemetry lives IN the engine stage's carried state
         # (int32[n_dev], accumulated on device, fetched only at sync points)
-        self._drain_rounds = jnp.zeros((n_dev,), jnp.int32)
+        self._drain_rounds = dist_router.drain_telemetry_new(n_dev)
         self._bucketed = dist_router.make_bucketed_step(
             cfg, mesh, replica_exec, self.trial_backend)
         if routing == "device":
@@ -512,6 +659,7 @@ class ShardedSummarizer:
         self.pipeline = bool(pipeline) and self.sync_free
         self._pending = None        # routed buckets awaiting engine dispatch
         self._epoch = 0             # engine dispatches applied to self.state
+        self._init_crash_consistency(checkpoint_dir)
 
         state1 = new_state(cfg)
         n = self.n_shards
@@ -705,12 +853,19 @@ class ShardedSummarizer:
         try:
             for off in range(0, len(changes), self.router_chunk):
                 chunk = changes[off:off + self.router_chunk]
+                self._journal_chunk(chunk)      # durable BEFORE dispatch
                 if self.routing == "device":
                     self._process_chunk_device(chunk)
                 else:
                     self._process_chunk_host(chunk)
+                self._cursor += len(chunk)
         finally:
             self._in_dispatch = False
+
+    @property
+    def dispatch_chunk(self) -> int:
+        """Stream slice size per journaled dispatch (= ``router_chunk``)."""
+        return self.router_chunk
 
     def _process_chunk_host(self, chunk: Sequence[Change]) -> None:
         """Host routing: bucket hashed changes per shard, feed padded
@@ -939,7 +1094,71 @@ class ShardedSummarizer:
                     router_syncs=self.router_syncs,
                     router_host_dict_ops=self._host_dict_ops,
                     router_sync_free=self.sync_free,
-                    router_pipelined=self.pipeline)
+                    router_pipelined=self.pipeline,
+                    # recoveries performed by a retry driver on this live
+                    # object; deliberately NOT part of the checkpoint
+                    # closure or the bitwise-recovery bar (it counts the
+                    # recoveries themselves)
+                    stream_retries=self.stream_retries)
+
+    # ----------------------------------------------------- recovery closure
+    def _ckpt_tree(self) -> dict:
+        return {"est": self.state._asdict(), "ist": self.intern._asdict()}
+
+    def _ckpt_host(self) -> dict:
+        # host_label_map() is the sync point: drains the pipeline and folds
+        # the lazy label buffer, so the map alone carries label recovery
+        return {"h2label": dict(self.host_label_map()),
+                "drain_rounds": np.asarray(self._drain_rounds),
+                "router_overflows": self.router_overflows,
+                "router_syncs": self.router_syncs,
+                "host_dict_ops": self._host_dict_ops}
+
+    def _ckpt_manifest(self) -> dict:
+        # drain geometry only shapes the PRNG schedule when delivery is NOT
+        # statically guaranteed (host-fallback replays shift it); pin the
+        # exact geometry only in that regime so the default config stays
+        # freely restorable across meshes (lane_cap derives from n_dev)
+        guaranteed = bool(self.router_geometry.drain_guaranteed) \
+            if self.router_geometry is not None else True
+        return {"tier": "sharded", "config": self.cfg.manifest(),
+                "n_shards": self.n_shards,
+                "router_chunk": self.router_chunk,
+                "drain_geometry": (None if guaranteed else
+                                   [self.lane_cap, self.max_drain_rounds]),
+                "routing": self.routing,
+                "replica_exec": self.replica_exec,
+                "trial_backend": self.trial_backend,
+                "n_devices": int(self.mesh.devices.size)}
+
+    @staticmethod
+    def _ckpt_pins() -> tuple:
+        # routing / replica_exec / trial_backend / n_devices are
+        # bitwise-identical execution variants (standing differential bar)
+        # — recorded, not pinned; config, shard placement, chunk boundaries
+        # and an unguaranteed drain geometry all shape the replayed bits
+        return ("tier", "config", "n_shards", "router_chunk",
+                "drain_geometry")
+
+    def _ckpt_apply(self, tree: dict, host: dict, extra: dict) -> None:
+        from repro.dist import router as dist_router
+        self.state = EngineState(**tree["est"])
+        self.intern = dist_router.InternState(**tree["ist"])
+        self._drain_rounds = dist_router.drain_telemetry_restore(
+            host["drain_rounds"], int(self.mesh.devices.size))
+        self._h2label = dict(host["h2label"])
+        self._label_buf = []
+        self._label_head = None
+        self.router_overflows = int(host["router_overflows"])
+        self.router_syncs = int(host["router_syncs"])
+        self._host_dict_ops = int(host["host_dict_ops"])
+        self._pending = None
+        self._host_cache = None
+        self._epoch = int(extra["epoch"])
+        self._journal_seq = int(extra["journal_seq"])
+        self._cursor = int(extra["cursor"])
+        self._recovered = True
+        self._incarnation += 1
 
     # ------------------------------------------------------------ materialize
     def live_edges(self) -> Set[Tuple[object, object]]:

@@ -97,6 +97,17 @@ class EngineConfig:
             raise ValueError(f"unknown commit rule {self.commit!r}; "
                              f"expected one of {COMMIT_RULES}")
 
+    def manifest(self) -> dict:
+        """JSON-able identity of this config for checkpoint manifests.
+
+        Every field participates: the table capacities, the policy triple
+        and the PRNG seed all shape the engine state arrays and the trial
+        schedule, so a checkpoint taken under one config is only bitwise
+        replayable under an equal config (``repro.checkpoint.summary``
+        refuses a mismatched restore instead of silently corrupting).
+        """
+        return dataclasses.asdict(self)
+
     def table_caps(self) -> dict:
         def pow2(x: int) -> int:
             c = 1

@@ -186,6 +186,29 @@ def intern_new(cfg: EngineConfig) -> InternState:
     )
 
 
+def drain_telemetry_new(n_dev: int) -> jax.Array:
+    """Fresh engine-stage drain-round telemetry carry (``int32[n_dev]``).
+
+    Crash-consistency note (``repro.checkpoint.summary``): the route stage
+    is a pure function of the chunk — it has no state to checkpoint.  The
+    recovery closure is exactly the engine stage's carried operands: the
+    stacked ``EngineState`` + :class:`InternState` and this telemetry
+    vector.  The drain loop is pmin/pmax-agreed, so the vector is
+    mesh-uniform by construction; a checkpoint can therefore restore it
+    onto a mesh with a *different* device count by broadcasting the
+    per-run count (``max``) — the basis of the elastic-restore leg.
+    """
+    return jnp.zeros((n_dev,), jnp.int32)
+
+
+def drain_telemetry_restore(saved, n_dev: int) -> jax.Array:
+    """Re-broadcast a saved (mesh-uniform) drain-round vector onto a mesh
+    of ``n_dev`` devices; bitwise-identical when the topology matches."""
+    import numpy as np
+    count = jnp.int32(np.max(np.asarray(saved))) if np.size(saved) else 0
+    return jnp.full((n_dev,), count, jnp.int32)
+
+
 def _intern_probe(ist: InternState, hi: jax.Array, lo: jax.Array,
                   valid: jax.Array, n_cap: int,
                   ) -> Tuple[InternState, jax.Array]:

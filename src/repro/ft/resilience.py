@@ -1,4 +1,4 @@
-"""Fault-tolerance runtime pieces: stragglers, elastic re-mesh, retry loop.
+"""Fault-tolerance runtime pieces: stragglers, elastic re-mesh, retry loops.
 
 On a real multi-pod fleet these hooks sit in the launcher process:
   * StragglerDetector - robust per-step timing outlier detection; persistent
@@ -8,12 +8,16 @@ On a real multi-pod fleet these hooks sit in the launcher process:
     checkpointer executes (restore under new shardings).
   * run_with_retries - step-loop wrapper: on failure, restore latest
     checkpoint and continue (crash-equivalent restart without job loss).
+  * run_stream_with_recovery - the streaming-shaped sibling for the
+    summarizer tiers: epoch checkpoints + chunk-journal recovery
+    (``repro.checkpoint.summary``) with bounded exponential backoff,
+    wired into ``launch/stream.py --checkpoint-dir``.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 
 @dataclasses.dataclass
@@ -80,3 +84,61 @@ def run_with_retries(step: Callable[[int], None], save_fn: Callable[[int], None]
                 raise
             i = restore_fn()
     return i
+
+
+def run_stream_with_recovery(make_summarizer: Callable[[], object],
+                             stream: Sequence, ckpt_dir: str, *,
+                             ckpt_every: int = 16,
+                             resume: bool = False,
+                             max_failures: int = 3,
+                             base_backoff_s: float = 0.05,
+                             max_backoff_s: float = 2.0,
+                             sleep: Callable[[float], None] = time.sleep):
+    """Crash-tolerant streaming driver over a checkpointing summarizer.
+
+    Feeds ``stream`` one dispatch chunk at a time, checkpointing every
+    ``ckpt_every`` chunks.  When a chunk fails, the (possibly torn) live
+    summarizer is ABANDONED — recovery never trusts in-memory state after
+    a fault — and a fresh one from ``make_summarizer()`` restores the
+    latest valid epoch, replays the journal tail
+    (``repro.checkpoint.summary.recover_summarizer``) and resumes from
+    the recovered stream cursor after a bounded exponential backoff.
+    ``resume=True`` recovers before the first chunk too (the
+    ``launch/stream.py --resume`` path).
+
+    Retries are counted on the summarizer's ``stream_retries`` telemetry
+    (reported by ``stats()`` alongside ``router_overflows`` /
+    ``router_syncs``); the counter survives summarizer rebuilds but is
+    deliberately NOT part of the checkpoint closure — it counts the
+    recoveries themselves, so the bitwise recovery bar excludes it.
+
+    Returns the finished summarizer (a final ``save()`` epoch included
+    when ``ckpt_every > 0``).
+    """
+    from repro.ft.inject import drive
+
+    stream = list(stream)
+    failures = 0
+
+    def fresh(recover: bool):
+        s = make_summarizer()
+        if s._ckpt_dir is None:
+            s._ckpt_dir = ckpt_dir
+        if recover:
+            s.recover()
+        s.stream_retries = failures
+        return s
+
+    summ = fresh(recover=resume)
+    while True:
+        try:
+            drive(summ, stream, ckpt_every=ckpt_every, start=summ.stream_cursor)
+            if ckpt_every:
+                summ.save()
+            return summ
+        except Exception:
+            failures += 1
+            if failures > max_failures:
+                raise
+            sleep(min(base_backoff_s * (2 ** (failures - 1)), max_backoff_s))
+            summ = fresh(recover=True)

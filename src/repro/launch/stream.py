@@ -8,12 +8,23 @@ through the device-side router by default (``--routing device``); pass
 ``--routing host`` to drive the same shards through host bucketing, the
 differential reference path.
 
+With ``--checkpoint-dir`` the batched/sharded engines run crash-consistent:
+every dispatch chunk is write-ahead journaled, an epoch checkpoint lands
+every ``--checkpoint-every`` chunks, and a failed chunk abandons the live
+summarizer, restores the latest valid epoch, replays the journal tail and
+resumes (``repro.ft.resilience.run_stream_with_recovery``; retries are
+reported as ``stream_retries`` in the final stats).  ``--resume`` recovers
+from the directory before processing, so a killed run continues from its
+last journaled chunk instead of starting over.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.stream --algo mosso --nodes 2000 \
       --edges 8000 --engine reference
   PYTHONPATH=src python -m repro.launch.stream --engine batched --batch 64
   PYTHONPATH=src python -m repro.launch.stream --engine sharded --shards 2 \
       --routing device --router-chunk 1024
+  PYTHONPATH=src python -m repro.launch.stream --engine sharded \
+      --checkpoint-dir /tmp/mosso-ckpt --checkpoint-every 8 --resume
 """
 from __future__ import annotations
 
@@ -100,7 +111,23 @@ def main() -> None:
     ap.add_argument("--weight-levels", type=int, default=dflt.weight_levels,
                     help="weighted objective: node weights 1 + hash % N "
                          "(0/1 = uniform)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="batched/sharded: crash-consistent mode — "
+                         "write-ahead journal every dispatch chunk and "
+                         "checkpoint epochs into this directory")
+    ap.add_argument("--checkpoint-every", type=int, default=16,
+                    help="chunks between epoch checkpoints "
+                         "(with --checkpoint-dir)")
+    ap.add_argument("--resume", action="store_true",
+                    help="recover from --checkpoint-dir (last valid epoch "
+                         "+ journal replay) before processing")
+    ap.add_argument("--max-failures", type=int, default=3,
+                    help="failed chunks tolerated before giving up "
+                         "(with --checkpoint-dir)")
     args = ap.parse_args()
+    if args.checkpoint_dir and args.engine == "reference":
+        ap.error("--checkpoint-dir requires --engine batched or sharded "
+                 "(the reference tier has no checkpoint closure)")
 
     stream = make_stream(args.graph, args.nodes, args.deg, args.beta,
                          args.fully_dynamic, args.seed)
@@ -122,11 +149,20 @@ def main() -> None:
     elif args.engine == "batched":
         n_cap = 1 << max(8, (args.nodes * 2).bit_length())
         m_cap = 1 << max(10, (len(stream) * 2).bit_length())
-        bs = BatchedSummarizer(EngineConfig(
+        cfg = EngineConfig(
             n_cap=n_cap, m_cap=m_cap, c=args.c, escape=args.escape,
             batch=args.batch, proposal=args.proposal,
-            objective=args.objective, weight_levels=args.weight_levels))
-        bs.run(stream)
+            objective=args.objective, weight_levels=args.weight_levels)
+        if args.checkpoint_dir:
+            from repro.ft.resilience import run_stream_with_recovery
+            bs = run_stream_with_recovery(
+                lambda: BatchedSummarizer(
+                    cfg, checkpoint_dir=args.checkpoint_dir),
+                stream, args.checkpoint_dir,
+                ckpt_every=args.checkpoint_every, resume=args.resume,
+                max_failures=args.max_failures)
+        else:
+            bs = BatchedSummarizer(cfg).run(stream)
         phi, m = bs.phi, bs.num_edges
         extra = str(bs.stats())
     else:
@@ -134,22 +170,34 @@ def main() -> None:
         # than |V| / n_shards (src/repro/dist/README.md)
         n_cap = 1 << max(8, (args.nodes * 2).bit_length())
         m_cap = 1 << max(10, (len(stream) * 2).bit_length())
-        ss = ShardedSummarizer(
-            EngineConfig(n_cap=n_cap, m_cap=m_cap, c=args.c,
-                         escape=args.escape, batch=args.batch,
-                         proposal=args.proposal, objective=args.objective,
-                         weight_levels=args.weight_levels),
-            n_shards=args.shards, routing=args.routing,
-            router_chunk=args.router_chunk, lane_cap=args.lane_cap,
-            max_drain_rounds=args.max_drain_rounds,
-            chunk_sync=args.chunk_sync, pipeline=not args.no_pipeline,
-            replica_exec=args.replica_exec)
-        if args.routing == "device":
-            print(f"router: lane_cap={ss.lane_cap} "
-                  f"max_drain_rounds={ss.max_drain_rounds} "
-                  f"sync_free={ss.sync_free} pipeline={ss.pipeline} "
-                  f"replica_exec={ss.replica_exec}")
-        ss.run(stream)
+        cfg = EngineConfig(n_cap=n_cap, m_cap=m_cap, c=args.c,
+                           escape=args.escape, batch=args.batch,
+                           proposal=args.proposal, objective=args.objective,
+                           weight_levels=args.weight_levels)
+
+        def make_sharded():
+            return ShardedSummarizer(
+                cfg, n_shards=args.shards, routing=args.routing,
+                router_chunk=args.router_chunk, lane_cap=args.lane_cap,
+                max_drain_rounds=args.max_drain_rounds,
+                chunk_sync=args.chunk_sync, pipeline=not args.no_pipeline,
+                replica_exec=args.replica_exec,
+                checkpoint_dir=args.checkpoint_dir)
+
+        if args.checkpoint_dir:
+            from repro.ft.resilience import run_stream_with_recovery
+            ss = run_stream_with_recovery(
+                make_sharded, stream, args.checkpoint_dir,
+                ckpt_every=args.checkpoint_every, resume=args.resume,
+                max_failures=args.max_failures)
+        else:
+            ss = make_sharded()
+            if args.routing == "device":
+                print(f"router: lane_cap={ss.lane_cap} "
+                      f"max_drain_rounds={ss.max_drain_rounds} "
+                      f"sync_free={ss.sync_free} pipeline={ss.pipeline} "
+                      f"replica_exec={ss.replica_exec}")
+            ss.run(stream)
         phi, m = ss.phi, ss.num_edges
         extra = str(ss.stats())
     el = time.time() - t0

@@ -324,13 +324,28 @@ class SummaryQuery:
         self._n_seen = len(summarizer._rev)
         self._k = make_query_kernels(summarizer.trial_backend)
         self.epoch = summarizer.flush_epoch
+        self._summ = summarizer
+        self._inc = summarizer._incarnation  # restore fences this view
 
     # ------------------------------------------------------------- id space
+    def _check_pin(self) -> None:
+        """A checkpoint ``restore()`` rewinds the summarizer to a different
+        epoch lineage and replaces its label maps; a view pinned before the
+        restore would resolve labels against state it was never snapshotted
+        from.  Fail loudly instead — take a fresh ``query()`` view."""
+        if self._summ._incarnation != self._inc:
+            raise RuntimeError(
+                f"query view pinned at epoch {self.epoch} predates a "
+                f"checkpoint restore on this summarizer; take a fresh "
+                f"view with .query()")
+
     def seen_labels(self) -> List[object]:
         """Labels interned at snapshot time, in encounter order."""
+        self._check_pin()
         return list(self._rev[:self._n_seen])
 
     def _nids(self, labels: Sequence[object]) -> np.ndarray:
+        self._check_pin()
         out = np.empty(len(labels), np.int32)
         for i, lab in enumerate(labels):
             nid = self._ids.get(lab)
@@ -395,9 +410,22 @@ class ShardedSummaryQuery:
         self._intern_host = None
         self.epoch = summarizer.flush_epoch
         self.n_shards = summarizer.n_shards
+        self._inc = summarizer._incarnation  # restore fences this view
 
     # ------------------------------------------------------------- id space
+    def _check_pin(self) -> None:
+        """Restore fence (see :meth:`SummaryQuery._check_pin`): this view
+        resolves nids through the summarizer's live hash -> label map, so a
+        checkpoint restore — which replaces that map with a different
+        lineage's — must invalidate it loudly."""
+        if self._summ._incarnation != self._inc:
+            raise RuntimeError(
+                f"query view pinned at epoch {self.epoch} predates a "
+                f"checkpoint restore on this summarizer; take a fresh "
+                f"view with .query()")
+
     def _hash_words(self, labels: Sequence[object]):
+        self._check_pin()
         from repro.dist import labelhash
         hi, lo = labelhash.hash_words(list(labels))
         return _pad_pow2(hi, -1), _pad_pow2(lo, -1)
@@ -424,6 +452,7 @@ class ShardedSummaryQuery:
         """nid -> caller label for one shard, from the SNAPSHOT intern."""
         if shard not in self._rev_cache:
             from repro.dist import labelhash
+            self._check_pin()
             l2h, n_nodes = self._snapshot_intern()
             rows = l2h[shard][:int(n_nodes[shard])]
             self._summ._fold_labels()   # append-only superset map: safe

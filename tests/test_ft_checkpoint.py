@@ -34,6 +34,46 @@ def test_checkpoint_atomicity(tmp_path):
     assert checkpointer.latest_step(str(tmp_path)) == 2
 
 
+def test_flatten_keys_collision_proof(tmp_path):
+    # a literal '/' in a dict key must not alias a nesting boundary: both
+    # trees roundtrip to their own (distinct) leaf values
+    t1 = {"a/b": jnp.full((2,), 1.0)}
+    t2 = {"a": {"b": jnp.full((2,), 2.0)}}
+    checkpointer.save(str(tmp_path / "d1"), 0, t1)
+    checkpointer.save(str(tmp_path / "d2"), 0, t2)
+    b1 = checkpointer.restore(str(tmp_path / "d1"), 0, t1)
+    b2 = checkpointer.restore(str(tmp_path / "d2"), 0, t2)
+    np.testing.assert_array_equal(np.asarray(b1["a/b"]), 1.0)
+    np.testing.assert_array_equal(np.asarray(b2["a"]["b"]), 2.0)
+
+
+def test_checksums_recorded_and_verified(tmp_path):
+    d = str(tmp_path)
+    tree = {"w": jnp.arange(64.0)}
+    checkpointer.save(d, 3, tree, blobs={"host.pkl": b"payload"})
+    meta = checkpointer.load_meta(d, 3)
+    assert set(meta["checksums"]) == {"arrays.npz", "host.pkl"}
+    assert checkpointer.verify(d, 3)
+    assert checkpointer.load_blob(d, 3, "host.pkl") == b"payload"
+    # flip bytes in the payload: verify() must catch what np.load cannot
+    path = tmp_path / "step_00000003" / "arrays.npz"
+    data = bytearray(path.read_bytes())
+    data[len(data) // 2] ^= 0xFF
+    path.write_bytes(bytes(data))
+    assert not checkpointer.verify(d, 3)
+
+
+def test_latest_valid_step_skips_corrupt_newest(tmp_path):
+    d = str(tmp_path)
+    tree = {"w": jnp.ones((8,))}
+    checkpointer.save(d, 1, tree)
+    checkpointer.save(d, 2, tree)
+    (tmp_path / "step_00000002" / "meta.json").write_text("{not json")
+    assert checkpointer.latest_step(d) == 2          # present...
+    assert checkpointer.latest_valid_step(d) == 1    # ...but not trusted
+    assert checkpointer.valid_steps(d) == [1]
+
+
 def test_straggler_detector():
     det = StragglerDetector(min_samples=4)
     for t in range(10):
